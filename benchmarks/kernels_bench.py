@@ -1,0 +1,69 @@
+"""Kernel micro-benchmarks at paper scale (us_per_call, jnp fast path).
+
+The Pallas kernels target TPU; on this CPU container they execute in
+interpret mode (orders of magnitude slower than compiled), so wall-time
+here benchmarks the jnp dispatch path and records interpret-mode cost for
+reference only on tiny sizes.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fuzzy import FuzzyEvaluator
+from repro.core.selection import dcs_select
+from repro.kernels import ops as kops
+
+
+def _time(fn, *args, repeats=3, **kw) -> float:
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def bench_fuzzy_eval() -> List[str]:
+    rows = []
+    ev = FuzzyEvaluator()
+    for p in (30, 10_000, 1_000_000):      # road, city, Tokyo-scale/3
+        x = jax.random.uniform(jax.random.PRNGKey(0), (p, 4))
+        fn = jax.jit(ev.evaluate)
+        us = _time(fn, x)
+        rows.append(f"fuzzy_eval_jnp_P={p},{us:.1f},us_per_call;"
+                    f"{p/us:.1f} vehicles/us")
+    return rows
+
+
+def bench_neighbor_elect() -> List[str]:
+    rows = []
+    for n in (30, 1000, 10_000):
+        pos = jax.random.uniform(jax.random.PRNGKey(1), (n,)) * 1000.0 * n / 30
+        evl = jax.random.uniform(jax.random.PRNGKey(2), (n,)) * 100.0
+        fn = jax.jit(lambda p, e: dcs_select(p, e, comm_range=200.0,
+                                             top_m=2, e_tau=30.0))
+        us = _time(fn, pos, evl)
+        rows.append(f"neighbor_elect_jnp_N={n},{us:.1f},us_per_call")
+    return rows
+
+
+def bench_wkv6() -> List[str]:
+    rows = []
+    b, h, n = 1, 4, 64
+    for t in (256, 1024):
+        ks = jax.random.split(jax.random.PRNGKey(3), 6)
+        r, k, v = (jax.random.normal(ks[i], (b, t, h, n)) for i in range(3))
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, n))) * 0.5 + 0.5
+        u = jax.random.normal(ks[4], (h, n)) * 0.1
+        s0 = jnp.zeros((b, h, n, n))
+        fn = jax.jit(lambda *a: kops.wkv6(*a)[0])
+        us = _time(fn, r, k, v, w, u, s0)
+        rows.append(f"wkv6_scan_T={t},{us:.1f},us_per_call;"
+                    f"{b*t*h*n/us:.1f} elems/us")
+    return rows

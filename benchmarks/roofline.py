@@ -1,0 +1,42 @@
+"""Roofline table from the dry-run JSONL artifacts (deliverable g)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load_rows(path: str) -> List[Dict]:
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            try:
+                rows.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+    return rows
+
+
+def bench_roofline_table() -> List[str]:
+    out = []
+    for fname, tag in (("dryrun_optimized.jsonl", "16x16"),
+                       ("dryrun_optimized_multipod.jsonl", "2x16x16")):
+        rows = load_rows(os.path.join(RESULTS, fname))
+        ok = [r for r in rows if r.get("ok")]
+        fail = [r for r in rows if not r.get("ok")]
+        for r in ok:
+            rl = r["roofline"]
+            out.append(
+                f"roofline_{tag}_{r['arch']}_{r['shape']},"
+                f"{rl['bound_s']:.3f},"
+                f"dom={rl['dominant']};c={rl['compute_s']:.3f};"
+                f"m={rl['memory_s']:.3f};n={rl['collective_s']:.3f};"
+                f"useful={r['useful_compute_ratio']:.2f};"
+                f"peakGiB={r['memory']['peak_bytes']/2**30:.2f}")
+        out.append(f"roofline_{tag}_summary,{len(ok)},"
+                   f"ok;{len(fail)} failed")
+    return out

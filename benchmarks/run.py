@@ -1,0 +1,62 @@
+"""Benchmark harness — one function per paper table/figure + the
+framework-level benches.  Prints ``name,value,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run              # all
+  PYTHONPATH=src python -m benchmarks.run fig2 fig9    # subset
+Env:
+  REPRO_BENCH_ROUNDS=N   FL rounds per curve (default 5)
+  REPRO_BENCH_FULL=1     Table-3-scale FL profile (slow on CPU)
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks.kernels_bench import (bench_fuzzy_eval, bench_neighbor_elect,
+                                      bench_wkv6)
+from benchmarks.paper_figures import (bench_fig2_overhead,
+                                      bench_fig6_accuracy,
+                                      bench_fig7_distribution,
+                                      bench_fig8_noniid,
+                                      bench_fig9_accumulated_time)
+from benchmarks.roofline import bench_roofline_table
+from benchmarks.staleness import bench_staleness
+from benchmarks.selection_collectives import bench_selection_collectives
+
+BENCHES = {
+    "fig2": bench_fig2_overhead,
+    "fig6": bench_fig6_accuracy,
+    "fig7": bench_fig7_distribution,
+    "fig8": bench_fig8_noniid,
+    "fig9": bench_fig9_accumulated_time,
+    "kernels_fuzzy": bench_fuzzy_eval,
+    "kernels_elect": bench_neighbor_elect,
+    "kernels_wkv6": bench_wkv6,
+    "selection_collectives": bench_selection_collectives,
+    "staleness": bench_staleness,
+    "roofline": bench_roofline_table,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    print("name,value,derived")
+    for name in names:
+        fn = BENCHES.get(name)
+        if fn is None:
+            print(f"{name},NaN,unknown bench (known: {' '.join(BENCHES)})")
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row, flush=True)
+            print(f"{name}_wall_s,{time.time()-t0:.1f},bench total",
+                  flush=True)
+        except Exception as e:                       # noqa: BLE001
+            traceback.print_exc()
+            print(f"{name}_error,1,{type(e).__name__}: {e}", flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,60 @@
+"""End-to-end federated training (the paper's experiment, §6).
+
+Runs the full round engine — broadcast, Eq. 7 probe, fuzzy evaluation,
+DCS election, Eq. 1 local SGD on the selected vehicles, deadline filter,
+FedAvg aggregation — for several rounds on the synthetic non-iid dataset,
+and prints the accuracy trajectory vs the random baseline.
+
+Each round trains ~5 clients x 15-30 local steps, so 10 rounds ≈ several
+hundred local SGD steps end-to-end (the paper's kind of workload: the
+local model is the 1.66M-param CNN).
+
+  PYTHONPATH=src python examples/fl_training.py [rounds]
+"""
+import sys
+import time
+
+import numpy as np
+
+from repro.fl.mobility import MobilityConfig
+from repro.fl.partition import PartitionConfig
+from repro.fl.rounds import FLSimConfig, FLSimulation
+
+ROUNDS = int(sys.argv[1]) if len(sys.argv) > 1 else 8
+
+
+def run(scheme: str) -> list:
+    cfg = FLSimConfig(
+        scheme=scheme,
+        local_epochs=1,
+        samples_per_class=520,
+        probe_samples=128,
+        partition=PartitionConfig(big_quantity=200, small_quantity=45,
+                                  classes_per_client=9),
+        mobility=MobilityConfig(seed=0),
+        seed=0,
+    )
+    sim = FLSimulation(cfg)
+    hist = []
+    for r in range(ROUNDS):
+        t0 = time.time()
+        row = sim.run_round(r)
+        hist.append(row)
+        print(f"  [{scheme}] round {r}: acc={row['accuracy']:.3f} "
+              f"selected={row['n_selected']} aggregated={row['n_aggregated']}"
+              f" stragglers={row['n_straggler']} ({time.time()-t0:.0f}s)",
+              flush=True)
+    return hist
+
+
+if __name__ == "__main__":
+    print("=== DCS (the paper's scheme) ===")
+    h_dcs = run("dcs")
+    print("=== random (CCS baseline) ===")
+    h_rnd = run("random")
+    a1 = max(h["accuracy"] for h in h_dcs)
+    a2 = max(h["accuracy"] for h in h_rnd)
+    print(f"\nbest accuracy: DCS={a1:.3f} random={a2:.3f} "
+          f"(paper: DCS outperforms random after enough rounds)")
+    s1 = np.mean([h["n_selected"] for h in h_dcs])
+    print(f"DCS avg selected clients: {s1:.2f} (paper: ~5.15)")

@@ -1,0 +1,66 @@
+"""Quickstart: the paper's core pipeline in 60 lines.
+
+30 vehicles on a 1 km road -> fuzzy multi-objective evaluation (local)
+-> distributed neighbour election (DSRC, top-2 per 200 m) -> compare with
+centralized fuzzy selection and the Eq. 5 communication overhead.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fuzzy import FuzzyEvaluator
+from repro.core.overhead import (GBoardParams, crossing_interval_s,
+                                 state_maintenance_bytes)
+from repro.core.selection import ccs_fuzzy_select, dcs_select
+from repro.fl.mobility import FreewayMobility, MobilityConfig
+from repro.fl.network import CellularNetwork, NetworkConfig
+
+rng = np.random.default_rng(0)
+N = 30
+
+# --- vehicle state (locally observable; nothing goes to a server) ---------
+mob = FreewayMobility(MobilityConfig(n_vehicles=N, seed=0))
+net = CellularNetwork(NetworkConfig(seed=0))
+pos = mob.positions(t_s=0.0)
+
+sample_quantity = np.where(np.arange(N) < 12, 4500, 45)        # Table 3
+throughput = net.predicted_throughput(pos)                     # CWND avg
+capability = rng.uniform(0.25, 1.0, N)                         # 1/C_i
+loss_probe = rng.uniform(0.5, 3.0, N)                          # Eq. 7
+
+features = jnp.asarray(np.stack([
+    sample_quantity / sample_quantity.max(),
+    throughput / throughput.max(),
+    capability / capability.max(),
+    loss_probe / loss_probe.max(),
+], axis=1), jnp.float32)
+
+# --- fuzzy evaluation (Mamdani, 81 rules, COG) -----------------------------
+evaluator = FuzzyEvaluator()
+evals = evaluator.evaluate(features)
+print("evaluations (0-100):", np.round(np.asarray(evals), 1))
+print("levels:", np.asarray(evaluator.level_of(evals)))
+
+# --- distributed client selection (paper Alg. 1) ---------------------------
+mask_dcs = dcs_select(jnp.asarray(pos), evals, comm_range=200.0, top_m=2,
+                      e_tau=30.0)
+sel_dcs = np.where(np.asarray(mask_dcs))[0]
+print(f"\nDCS selected {len(sel_dcs)} clients (paper avg ~5.15): {sel_dcs}")
+
+# --- centralized fuzzy selection for comparison ----------------------------
+mask_ccs = ccs_fuzzy_select(evals, 5)
+sel_ccs = np.where(np.asarray(mask_ccs))[0]
+overlap = set(sel_dcs) & set(sel_ccs)
+print(f"CCS-fuzzy top-5: {sel_ccs}; overlap with DCS: {sorted(overlap)}")
+
+# --- the Eq. 5 overhead the DCS scheme eliminates --------------------------
+p = GBoardParams()
+c = state_maintenance_bytes(p.n_participants, p.state_bytes_cfl,
+                            p.round_period_s, 1.0)
+x = crossing_interval_s(p.n_participants, p.state_bytes_cfl,
+                        p.round_period_s, p.clients_per_round, p.model_bytes)
+print(f"\nEq.5 @ GBoard scale: state upkeep {c/1e9:.1f} GB/round at tau=1s "
+      f"(model uploads: 0.42 GB); curves cross at tau={x:.0f}s")
+print("DCS sends zero state to the server: selection is neighbour-local.")

@@ -1,0 +1,49 @@
+"""Config registry: resolves ``--arch <id>`` ids to ArchConfig instances."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (ArchConfig, ShapeConfig, SHAPES, TRAIN_4K,
+                                PREFILL_32K, DECODE_32K, LONG_500K,
+                                scaled_down)
+
+# CLI id -> module name (ids may contain characters invalid in module names).
+_ARCH_MODULES: Dict[str, str] = {
+    "rwkv6-3b": "rwkv6_3b",
+    "granite-8b": "granite_8b",
+    "whisper-medium": "whisper_medium",
+    "yi-6b": "yi_6b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b_a6_6b",
+    "paligemma-3b": "paligemma_3b",
+    "gemma-2b": "gemma_2b",
+    "minicpm-2b": "minicpm_2b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+}
+
+ARCH_IDS: List[str] = list(_ARCH_MODULES)
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {list(SHAPES)}")
+    return SHAPES[name]
+
+
+def all_archs() -> Dict[str, ArchConfig]:
+    return {n: get_arch(n) for n in ARCH_IDS}
+
+
+__all__ = [
+    "ArchConfig", "ShapeConfig", "SHAPES", "ARCH_IDS",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+    "get_arch", "get_shape", "all_archs", "scaled_down",
+]

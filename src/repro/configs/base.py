@@ -1,0 +1,194 @@
+"""Architecture + input-shape configuration dataclasses.
+
+Every assigned architecture gets one module in this package defining
+``CONFIG: ArchConfig`` with the exact public-literature hyperparameters
+(source cited in ``citation``).  ``repro.configs.get_arch(name)`` resolves the
+``--arch <id>`` CLI ids (which may contain dots/dashes) to those modules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """A single transformer/SSM/hybrid architecture.
+
+    The decoder "backbone" view: for [audio]/[vlm] archs the modality
+    frontend is a stub and ``encoder_seq``/``num_prefix_tokens`` describe the
+    precomputed embeddings the backbone consumes.
+    """
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int                   # 0 for attention-free (rwkv)
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    citation: str
+
+    # --- layer flavour -----------------------------------------------------
+    hidden_act: str = "silu"         # silu | geglu | gelu
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = True
+    logit_softcap: float = 0.0
+
+    # --- MoE ---------------------------------------------------------------
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0                # per-expert hidden width
+    moe_layer_period: int = 1        # every `period`-th layer is MoE
+    moe_layer_offset: int = 0
+    capacity_factor: float = 1.25
+
+    # --- SSM (mamba) / RWKV ------------------------------------------------
+    ssm_state_dim: int = 16
+    ssm_conv_width: int = 4
+    ssm_expand: int = 2
+    rwkv_head_size: int = 64
+    rwkv_decay_lora: int = 64        # rank of the data-dependent decay LoRA
+
+    # --- hybrid (jamba): one attention layer per `attn_layer_period` -------
+    attn_layer_period: int = 0
+    attn_layer_offset: int = 0
+
+    # --- encoder-decoder (whisper backbone) --------------------------------
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq: int = 0             # precomputed frame embeddings length
+
+    # --- VLM (paligemma): prefix patch embeddings --------------------------
+    num_prefix_tokens: int = 0
+
+    # --- long-context decode strategy --------------------------------------
+    sliding_window: int = 0          # >0: sliding-window attention available
+
+    # --- attention flavour --------------------------------------------------
+    qk_norm: bool = False            # qwen3-style per-head RMSNorm on q,k
+    scale_embed: bool = False        # gemma-style sqrt(d_model) embed scaling
+
+    # --- training ----------------------------------------------------------
+    residual_scale: float = 1.0      # minicpm depth-scaled residuals
+    lr_schedule: str = "cosine"      # cosine | wsd
+
+    # -----------------------------------------------------------------------
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm" and self.num_heads == 0
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    def layer_kind(self, i: int) -> str:
+        """'attn' or 'mamba' body for decoder layer i (hybrid interleave)."""
+        if self.family != "hybrid" or self.attn_layer_period == 0:
+            return "mamba" if self.name.startswith("rwkv") else "attn"
+        return ("attn" if i % self.attn_layer_period == self.attn_layer_offset
+                else "mamba")
+
+    def layer_is_moe(self, i: int) -> bool:
+        if not self.is_moe:
+            return False
+        return i % self.moe_layer_period == self.moe_layer_offset
+
+    def num_params(self) -> int:
+        """Analytic parameter count (embedding + per-layer), for roofline."""
+        d, v = self.d_model, self.vocab_size
+        n = v * d                                    # embedding
+        if not self.tie_embeddings:
+            n += v * d
+        for i in range(self.num_layers):
+            kind = self.layer_kind(i)
+            if self.name.startswith("rwkv"):
+                h = self.d_model
+                n += 6 * d * d                       # r,k,v,g,o + decay-ish
+                n += 2 * self.rwkv_decay_lora * d * 5
+                n += d * self.d_ff + self.d_ff * d   # channel mix
+                n += 4 * d
+                continue
+            if kind == "attn":
+                n += d * self.num_heads * self.head_dim          # q
+                n += 2 * d * self.num_kv_heads * self.head_dim   # k,v
+                n += self.num_heads * self.head_dim * d          # o
+            else:  # mamba
+                di = self.ssm_expand * d
+                n += d * 2 * di + di * d                          # in/out proj
+                n += di * self.ssm_conv_width
+                n += di * (2 * self.ssm_state_dim + di // 16 * 2)  # x_proj+dt
+            if self.layer_is_moe(i):
+                ff = self.moe_d_ff or self.d_ff
+                n += self.num_experts * 3 * d * ff + d * self.num_experts
+            else:
+                mult = 3 if self.hidden_act in ("silu", "geglu") else 2
+                n += mult * d * self.d_ff
+            n += 2 * d                                # norms
+        return n
+
+    def num_active_params(self) -> int:
+        """Active (per-token) parameters — MoE counts only routed experts."""
+        if not self.is_moe:
+            return self.num_params()
+        full = self.num_params()
+        ff = self.moe_d_ff or self.d_ff
+        n_moe_layers = sum(self.layer_is_moe(i) for i in range(self.num_layers))
+        dead = (self.num_experts - self.experts_per_token) * 3 * self.d_model * ff
+        return full - n_moe_layers * dead
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input shape."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+    grad_accum: int = 1              # train only: microbatch count
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train", grad_accum=8)
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def scaled_down(cfg: ArchConfig, *, layers: int = 2, d_model: int = 256,
+                experts: int = 4) -> ArchConfig:
+    """Reduced variant of the same family for CPU smoke tests."""
+    heads = 0 if cfg.num_heads == 0 else max(2, min(cfg.num_heads, 4))
+    kv = 0 if cfg.num_kv_heads == 0 else max(1, min(cfg.num_kv_heads, heads))
+    if heads and cfg.num_heads and cfg.num_kv_heads == cfg.num_heads:
+        kv = heads                                    # keep MHA archs MHA
+    head_dim = max(16, d_model // max(heads, 1)) if heads else 0
+    if cfg.head_dim > cfg.d_model // max(cfg.num_heads, 1):
+        head_dim = 2 * d_model // max(heads, 1)       # gemma-style oversized
+    upd = dict(
+        num_layers=layers,
+        d_model=d_model,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=head_dim,
+        d_ff=d_model * 4,
+        vocab_size=512,
+        rwkv_decay_lora=16,
+        encoder_layers=min(cfg.encoder_layers, layers),
+        encoder_seq=min(cfg.encoder_seq, 64),
+        num_prefix_tokens=min(cfg.num_prefix_tokens, 16),
+        sliding_window=min(cfg.sliding_window, 64) if cfg.sliding_window else 0,
+    )
+    if cfg.is_moe:
+        upd.update(num_experts=min(experts, cfg.num_experts),
+                   experts_per_token=min(cfg.experts_per_token, 2),
+                   moe_d_ff=d_model * 2)
+    if cfg.family == "hybrid":
+        upd.update(attn_layer_period=2, attn_layer_offset=0)
+    return dataclasses.replace(cfg, **upd)

@@ -1,0 +1,13 @@
+"""The paper's primary contribution: distributed client selection with a
+multi-objective fuzzy evaluator, plus the communication-overhead models and
+the mesh-collective restatement of the selection protocols."""
+from repro.core.fuzzy import FuzzyEvaluator, FuzzyEvaluatorConfig
+from repro.core.rules import build_rule_table, verify_anchors
+from repro.core.selection import (ccs_fuzzy_select, ccs_random_select,
+                                  dcs_select, selection_stats)
+
+__all__ = [
+    "FuzzyEvaluator", "FuzzyEvaluatorConfig", "build_rule_table",
+    "verify_anchors", "ccs_fuzzy_select", "ccs_random_select", "dcs_select",
+    "selection_stats",
+]

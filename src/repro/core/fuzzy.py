@@ -1,0 +1,84 @@
+"""The multi-objective fuzzy evaluator (paper §5).
+
+Mamdani inference over four normalized inputs — SQ, TA, CC, LF — with
+3 Gaussian membership functions per variable (Fig. 4), the 81-rule base
+of ``core.rules``, max-aggregation into the 9 output levels L0..L8 and
+centre-of-gravity defuzzification (Eq. 9) over singleton level centers on
+the paper's [0, 100] output scale.
+
+The evaluator is *local*: each participant computes only its own
+evaluation from locally observable state.  ``FuzzyEvaluator.evaluate`` is
+nevertheless batched (P, 4) because simulation evaluates all participants
+at once, and because at IoV scale this is the bulk workload the
+``kernels/fuzzy_eval.py`` Pallas kernel accelerates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rules import build_rule_table, NUM_OUT
+from repro.kernels import ops as kops
+
+
+def default_level_centers() -> jnp.ndarray:
+    """L0..L8 singleton centers on the paper's [0,100] evaluation scale."""
+    return jnp.linspace(0.0, 100.0, NUM_OUT)
+
+
+@dataclass
+class FuzzyEvaluatorConfig:
+    # Gaussian membership (means/sigmas per variable x level); Fig. 4 puts
+    # the three functions at low/mid/high of the normalized [0,1] range,
+    # with the mid function centred at the historical mean (dashed line).
+    means: np.ndarray = field(default_factory=lambda: np.tile(
+        np.array([0.15, 0.5, 0.85], np.float32), (4, 1)))
+    sigmas: np.ndarray = field(default_factory=lambda: np.full(
+        (4, 3), 0.18, np.float32))
+    e_tau: float = 30.0          # broadcast threshold E_tau (Alg. 1)
+
+
+class FuzzyEvaluator:
+    """Batched Mamdani evaluator.  ``impl``: jnp | pallas | oracle."""
+
+    def __init__(self, cfg: Optional[FuzzyEvaluatorConfig] = None,
+                 impl: Optional[str] = None):
+        self.cfg = cfg or FuzzyEvaluatorConfig()
+        self.impl = impl
+        self.rule_table, self.rule_levels = build_rule_table()
+        self.level_centers = default_level_centers()
+
+    # -- normalization (Eq. 8) --------------------------------------------
+    @staticmethod
+    def normalize(values: jax.Array, maxima: jax.Array) -> jax.Array:
+        """value / max(variable) — each column scaled to [0, 1]."""
+        return jnp.clip(values / jnp.maximum(maxima, 1e-9), 0.0, 1.0)
+
+    # -- calibration from history (§5.3: bounds from historical records) --
+    def calibrate(self, history: np.ndarray) -> None:
+        """history: (num_obs, 4) of normalized past observations.  Centers
+        the three membership functions on the 10th/50th/90th percentiles,
+        matching the paper's 'bound of each linguistic is defined through
+        historical records'."""
+        pct = np.percentile(history, [10, 50, 90], axis=0).T  # (4,3)
+        self.cfg.means = pct.astype(np.float32)
+        spread = np.maximum((pct[:, 2] - pct[:, 0]) / 4.0, 0.05)
+        self.cfg.sigmas = np.tile(spread[:, None], (1, 3)).astype(np.float32)
+
+    # -- inference ----------------------------------------------------------
+    def evaluate(self, x: jax.Array) -> jax.Array:
+        """x: (P, 4) normalized [SQ, TA, CC, LF] -> evaluations (P,) on
+        [0, 100]."""
+        return kops.fuzzy_eval(
+            x, jnp.asarray(self.cfg.means), jnp.asarray(self.cfg.sigmas),
+            self.rule_table, self.rule_levels, self.level_centers,
+            impl=self.impl)
+
+    def level_of(self, evaluation: jax.Array) -> jax.Array:
+        """Nearest output level L0..L8 for a defuzzified value."""
+        return jnp.argmin(
+            jnp.abs(evaluation[..., None] - self.level_centers), axis=-1)

@@ -1,0 +1,53 @@
+"""Client-selection schemes (paper §4.1/Fig. 1).
+
+- ``dcs_select``        — the paper's contribution: each vehicle broadcasts
+  its evaluation to DSRC neighbours (within ``comm_range``) iff it clears
+  ``E_tau``, and elects itself iff it is in the top-m of its neighbourhood
+  table (Alg. 1).  No server involvement.
+- ``ccs_fuzzy_select``  — [16]'s scheme: evaluations are computed locally,
+  uploaded, and the *server* picks the global top-n.
+- ``ccs_random_select`` — classical CCS baseline: server picks n uniformly
+  among participants whose state it maintains.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def dcs_select(pos: jax.Array, evals: jax.Array, *, comm_range: float = 200.0,
+               top_m: int = 2, e_tau: float = 30.0,
+               impl: Optional[str] = None) -> jax.Array:
+    """Distributed election.  pos (N,) road positions, evals (N,) fuzzy
+    evaluations.  Returns int32 mask (N,), 1 = self-elected client."""
+    return kops.neighbor_elect(pos, evals, comm_range=comm_range,
+                               top_m=top_m, e_tau=e_tau, impl=impl)
+
+
+def ccs_fuzzy_select(evals: jax.Array, n_clients: int) -> jax.Array:
+    """Server-side top-n on uploaded evaluations -> int32 mask (N,)."""
+    n = evals.shape[0]
+    _, idx = jax.lax.top_k(evals, min(n_clients, n))
+    return jnp.zeros((n,), jnp.int32).at[idx].set(1)
+
+
+def ccs_random_select(key: jax.Array, n_participants: int,
+                      n_clients: int) -> jax.Array:
+    """Uniform server-side selection -> int32 mask (N,)."""
+    idx = jax.random.choice(key, n_participants,
+                            (min(n_clients, n_participants),), replace=False)
+    return jnp.zeros((n_participants,), jnp.int32).at[idx].set(1)
+
+
+def selection_stats(mask: jax.Array, evals: jax.Array) -> dict:
+    n_sel = mask.sum()
+    return {
+        "n_selected": n_sel,
+        "mean_eval_selected": jnp.where(
+            n_sel > 0, (evals * mask).sum() / jnp.maximum(n_sel, 1), 0.0),
+        "mean_eval_all": evals.mean(),
+    }

@@ -1,0 +1,8 @@
+from repro.data.synthetic import (class_prototypes, make_dataset,
+                                  train_test_split, NUM_CLASSES, IMAGE_SIZE)
+from repro.data.lm import SyntheticLM, shard_batch
+
+__all__ = [
+    "class_prototypes", "make_dataset", "train_test_split",
+    "NUM_CLASSES", "IMAGE_SIZE", "SyntheticLM", "shard_batch",
+]

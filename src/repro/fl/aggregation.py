@@ -1,0 +1,49 @@
+"""Model aggregation (paper Eq. 2) and FedProx local objective.
+
+FedAvg: w_g = sum_i (|D_i|/|D|) w_i over the models that arrived before
+the deadline.  FedProx (cited as [17]) adds mu/2 * ||w - w_g||^2 to the
+local objective — implemented as a gradient term in the local trainer.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def fedavg(models: Sequence[Params], weights: Sequence[float]) -> Params:
+    """Eq. 2: sample-quantity-weighted average of local models."""
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.maximum(w.sum(), 1e-9)
+
+    def avg(*leaves):
+        stacked = jnp.stack(leaves)
+        return jnp.tensordot(w, stacked, axes=1).astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *models)
+
+
+def fedavg_masked(stacked_models: Params, weights: jax.Array) -> Params:
+    """FedAvg over a leading client axis with (possibly zero) weights —
+    jit-friendly form used by the round engine.  weights: (C,)."""
+    w = weights / jnp.maximum(weights.sum(), 1e-9)
+
+    def avg(leaf):
+        return jnp.tensordot(w, leaf.astype(jnp.float32), axes=1).astype(
+            leaf.dtype)
+
+    return jax.tree.map(avg, stacked_models)
+
+
+def global_loss(losses: jax.Array, weights: jax.Array) -> jax.Array:
+    """Eq. 3: the sample-weighted global loss."""
+    w = weights / jnp.maximum(weights.sum(), 1e-9)
+    return (losses * w).sum()
+
+
+def prox_grad(params: Params, global_params: Params, mu: float) -> Params:
+    """FedProx proximal gradient: mu * (w - w_g)."""
+    return jax.tree.map(lambda p, g: mu * (p - g), params, global_params)

@@ -1,0 +1,113 @@
+"""Participant-side logic: Eq. 7 loss probe + Eq. 1 local SGD training.
+
+The local trainer is one jitted function over fixed-capacity padded
+arrays (invalid samples masked out of the loss), scanning
+epochs x batches — the whole local round is a single XLA program.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.mnist_cnn import CNNConfig
+from repro.fl.aggregation import prox_grad
+from repro.models.cnn import cnn_forward, cnn_sample_losses
+from repro.train.optim import sgd_update
+
+Params = Any
+
+
+@functools.partial(jax.jit, static_argnames=("batch",))
+def dataset_loss(params: Params, images: jax.Array, labels: jax.Array,
+                 n_valid: jax.Array, batch: int = 512) -> jax.Array:
+    """Eq. 7: mean per-sample loss of the *global* model over the local
+    dataset, no gradient update.  images: (cap, 28,28,1)."""
+    cap = images.shape[0]
+    pad = (-cap) % batch
+    if pad:
+        images = jnp.pad(images, ((0, pad), (0, 0), (0, 0), (0, 0)))
+        labels = jnp.pad(labels, (0, pad))
+    nb = images.shape[0] // batch
+
+    def body(acc, i):
+        im = jax.lax.dynamic_slice_in_dim(images, i * batch, batch)
+        lb = jax.lax.dynamic_slice_in_dim(labels, i * batch, batch)
+        losses = cnn_sample_losses(params, im, lb)
+        idx = i * batch + jnp.arange(batch)
+        m = (idx < n_valid).astype(jnp.float32)
+        return acc + (losses * m).sum(), None
+
+    tot, _ = jax.lax.scan(body, jnp.float32(0.0), jnp.arange(nb))
+    return tot / jnp.maximum(n_valid.astype(jnp.float32), 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("epochs", "batch_size",
+                                             "steps_per_epoch", "lr",
+                                             "prox_mu"))
+def local_train(params: Params, images: jax.Array, labels: jax.Array,
+                n_valid: jax.Array, key: jax.Array, *, epochs: int,
+                batch_size: int, steps_per_epoch: int, lr: float = 0.05,
+                prox_mu: float = 0.0) -> Tuple[Params, jax.Array]:
+    """Eq. 1 local update loop.  Returns (params, mean last-epoch loss)."""
+    cap = images.shape[0]
+    global_params = params
+
+    def loss_fn(p, im, lb, m):
+        logits = cnn_forward(p, im)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[:, None], axis=-1)[:, 0]
+        nll = (logz - gold) * m
+        return nll.sum() / jnp.maximum(m.sum(), 1.0)
+
+    def epoch(carry, ekey):
+        p, _ = carry
+        perm = jax.random.permutation(ekey, cap)
+
+        def bstep(p, i):
+            idx = jax.lax.dynamic_slice_in_dim(perm, i * batch_size,
+                                               batch_size)
+            im = images[idx]
+            lb = labels[idx]
+            m = (idx < n_valid).astype(jnp.float32)
+            loss, grads = jax.value_and_grad(loss_fn)(p, im, lb, m)
+            if prox_mu > 0.0:
+                pg = prox_grad(p, global_params, prox_mu)
+                grads = jax.tree.map(lambda a, b: a + b, grads, pg)
+            return sgd_update(p, grads, lr), loss
+
+        p, losses = jax.lax.scan(bstep, p, jnp.arange(steps_per_epoch))
+        return (p, losses.mean()), None
+
+    keys = jax.random.split(key, epochs)
+    (params, last_loss), _ = jax.lax.scan(epoch, (params, jnp.float32(0.0)),
+                                          keys)
+    return params, last_loss
+
+
+@functools.partial(jax.jit, static_argnames=("batch",))
+def _count_correct(params: Params, images: jax.Array, labels: jax.Array,
+                   batch: int) -> jax.Array:
+    nb = images.shape[0] // batch
+
+    def body(acc, i):
+        im = jax.lax.dynamic_slice_in_dim(images, i * batch, batch)
+        lb = jax.lax.dynamic_slice_in_dim(labels, i * batch, batch)
+        pred = jnp.argmax(cnn_forward(params, im), -1)
+        ok = ((pred == lb) & (lb >= 0)).sum()
+        return acc + ok, None
+
+    tot, _ = jax.lax.scan(body, jnp.int32(0), jnp.arange(nb))
+    return tot
+
+
+def evaluate_accuracy(params: Params, images: jax.Array,
+                      labels: jax.Array, batch: int = 1024) -> float:
+    cap = images.shape[0]
+    pad = (-cap) % batch
+    if pad:
+        images = jnp.pad(images, ((0, pad), (0, 0), (0, 0), (0, 0)))
+        labels = jnp.pad(labels, (0, pad), constant_values=-1)
+    return float(_count_correct(params, images, labels, batch)) / float(cap)

@@ -1,0 +1,64 @@
+"""Freeway mobility model (paper §6.1: 30 vehicles, 1000 m straight road,
+freeway model).
+
+Vehicles keep lane-constant speeds (freeway model: no lane change modelled,
+speed jitter bounded) and wrap around the road segment, which keeps the
+density stationary like SUMO's closed-loop freeway scenario.  Two initial
+distributions reproduce Fig. 7: ``uniform`` and ``extreme`` (vehicles with
+the best evaluations crowded into one small area, the rest in another).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class MobilityConfig:
+    n_vehicles: int = 30
+    road_length_m: float = 1000.0
+    v_min_mps: float = 20.0          # ~72 km/h
+    v_max_mps: float = 33.0          # ~120 km/h
+    speed_jitter: float = 1.0
+    distribution: str = "uniform"    # uniform | extreme
+    cluster_span_m: float = 150.0    # extreme: span of each crowd
+    seed: int = 0
+
+
+class FreewayMobility:
+    def __init__(self, cfg: MobilityConfig,
+                 quality_rank: Optional[np.ndarray] = None):
+        """``quality_rank``: permutation of vehicles, best first — used by
+        the 'extreme' distribution to crowd good vehicles together."""
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed + 31)
+        n = cfg.n_vehicles
+        self.speeds = rng.uniform(cfg.v_min_mps, cfg.v_max_mps, n)
+        if cfg.distribution == "uniform":
+            self.x0 = rng.uniform(0, cfg.road_length_m, n)
+        elif cfg.distribution == "extreme":
+            rank = (quality_rank if quality_rank is not None
+                    else np.arange(n))
+            half = n // 2
+            x0 = np.empty(n)
+            # best half crowded at one end, worst half at the other
+            x0[rank[:half]] = rng.uniform(0, cfg.cluster_span_m, half)
+            x0[rank[half:]] = rng.uniform(
+                cfg.road_length_m - cfg.cluster_span_m,
+                cfg.road_length_m, n - half)
+            self.x0 = x0
+        else:
+            raise ValueError(cfg.distribution)
+        jr = np.random.default_rng(cfg.seed + 37)
+        self._jitter_phase = jr.uniform(0, 2 * np.pi, n)
+
+    def positions(self, t_s: float) -> np.ndarray:
+        """Deterministic in ``t_s`` (speed jitter is a per-vehicle
+        sinusoid), so the same instant can be queried repeatedly — needed
+        by the staleness experiment."""
+        jitter = self.cfg.speed_jitter * np.sin(
+            t_s / 7.0 + self._jitter_phase)
+        x = self.x0 + (self.speeds + jitter) * t_s
+        return np.mod(x, self.cfg.road_length_m)

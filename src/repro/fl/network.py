@@ -1,0 +1,98 @@
+"""Cellular throughput model + TCP-Reno CWND-based throughput predictor
+(paper §5.1, §6.1).
+
+Physical model: base stations uniformly spaced along the road; a
+vehicle's achievable rate interpolates between the worst MCS (0.24 Mbps,
+cell edge) and the best (10.4 Mbps, under the BS) by distance, with
+log-normal shadowing.  "MAX C/I" scheduling is approximated by letting
+concurrent uploaders in a cell share the airtime proportionally to their
+instantaneous rate.
+
+Predictor: the participant-side estimate is an average of recent TCP Reno
+congestion-window samples (paper: "averaging the CWND_SND values within a
+certain period").  Reno AIMD is simulated against a loss probability that
+rises toward the cell edge.  The paper only requires the predictor to be
+*order-preserving* w.r.t. the real throughput — property-tested.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class NetworkConfig:
+    road_length_m: float = 1000.0
+    n_bs: int = 3
+    best_rate_bps: float = 10.4e6
+    worst_rate_bps: float = 0.24e6
+    shadowing_sigma_db: float = 2.0
+    packet_bytes: int = 1500
+    rtt_s: float = 0.05                # vehicle<->BS loop for Reno dynamics
+    cwnd_history: int = 16
+    seed: int = 0
+
+
+class CellularNetwork:
+    def __init__(self, cfg: NetworkConfig):
+        self.cfg = cfg
+        self.bs_pos = (np.arange(cfg.n_bs) + 0.5) * (
+            cfg.road_length_m / cfg.n_bs)
+        self.rng = np.random.default_rng(cfg.seed + 53)
+
+    # -- ground-truth physical rate ---------------------------------------
+    def true_rate_bps(self, pos: np.ndarray,
+                      rng: "np.random.Generator" = None) -> np.ndarray:
+        rng = rng if rng is not None else self.rng
+        d = np.min(np.abs(pos[:, None] - self.bs_pos[None, :]), axis=1)
+        d_max = self.cfg.road_length_m / self.cfg.n_bs / 2.0
+        frac = np.clip(1.0 - d / d_max, 0.0, 1.0)          # 1 under BS
+        # log-scale interpolation between worst and best MCS
+        log_rate = (np.log10(self.cfg.worst_rate_bps)
+                    + frac * (np.log10(self.cfg.best_rate_bps)
+                              - np.log10(self.cfg.worst_rate_bps)))
+        shadow = rng.normal(0.0, self.cfg.shadowing_sigma_db / 10.0,
+                            size=pos.shape)
+        return 10.0 ** (log_rate + shadow)
+
+    # -- TCP Reno CWND simulation ------------------------------------------
+    def _loss_prob(self, rate_bps: np.ndarray) -> np.ndarray:
+        # loss rises as the achievable rate falls (cell edge)
+        frac = (np.log10(rate_bps) - np.log10(self.cfg.worst_rate_bps)) / (
+            np.log10(self.cfg.best_rate_bps)
+            - np.log10(self.cfg.worst_rate_bps))
+        return np.clip(0.08 * (1.0 - frac) + 0.002, 0.002, 0.2)
+
+    def cwnd_history(self, pos: np.ndarray, steps: int = 64,
+                     rng: "np.random.Generator" = None) -> np.ndarray:
+        """Simulate Reno for ``steps`` RTTs.  Returns (N, cwnd_history) of
+        the most recent congestion-window samples (segments)."""
+        rng = rng if rng is not None else self.rng
+        n = pos.shape[0]
+        rate = self.true_rate_bps(pos, rng=np.random.default_rng(0))
+        p_loss = self._loss_prob(rate)
+        bdp = rate * self.cfg.rtt_s / (8.0 * self.cfg.packet_bytes)
+        cwnd = np.ones(n)
+        hist = np.zeros((n, steps))
+        for t in range(steps):
+            loss = rng.random(n) < p_loss
+            cwnd = np.where(loss, np.maximum(cwnd / 2.0, 1.0), cwnd + 1.0)
+            cwnd = np.minimum(cwnd, np.maximum(bdp, 1.0))  # rate-limited
+            hist[:, t] = cwnd
+        return hist[:, -self.cfg.cwnd_history:]
+
+    def predicted_throughput(self, pos: np.ndarray,
+                             seed: int = None) -> np.ndarray:
+        """CWND-average predictor (paper §5.1), in bps-equivalent units.
+        ``seed`` pins the channel/loss realization (so the same physical
+        round can be evaluated at two positions)."""
+        rng = np.random.default_rng(seed) if seed is not None else None
+        h = self.cwnd_history(pos, rng=rng)
+        return h.mean(axis=1) * 8.0 * self.cfg.packet_bytes / self.cfg.rtt_s
+
+    # -- upload time --------------------------------------------------------
+    def upload_time_s(self, pos: np.ndarray, payload_bytes: float,
+                      latency_s: float = 0.2) -> np.ndarray:
+        return payload_bytes * 8.0 / self.true_rate_bps(pos) + latency_s

@@ -1,0 +1,80 @@
+"""Non-i.i.d. dataset partitioner (paper §6.1).
+
+Rules reproduced from the paper:
+- each vehicle draws from ``classes_per_client`` classes (9 / 6 / 2 in the
+  three Fig. 8 experiments), each class contributing an identical quantity;
+- quantity is unbalanced: vehicles 0-11 get ~4500 samples, vehicles 12-29
+  get ~45 (Table 3);
+- no sample is duplicated across vehicles.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PartitionConfig:
+    n_clients: int = 30
+    classes_per_client: int = 9
+    big_clients: int = 12           # vehicles 0..11
+    big_quantity: int = 4500
+    small_quantity: int = 45
+    num_classes: int = 10
+    seed: int = 0
+
+
+def client_quantities(cfg: PartitionConfig) -> np.ndarray:
+    q = np.full(cfg.n_clients, cfg.small_quantity, np.int64)
+    q[: cfg.big_clients] = cfg.big_quantity
+    return q
+
+
+def partition(images: np.ndarray, labels: np.ndarray,
+              cfg: PartitionConfig) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Split (images, labels) across clients.  Returns a list of per-client
+    (images, labels).  Raises if the source dataset is too small to honor
+    the no-duplication rule."""
+    rng = np.random.default_rng(cfg.seed + 17)
+    pools = {c: list(rng.permutation(np.where(labels == c)[0]))
+             for c in range(cfg.num_classes)}
+    quantities = client_quantities(cfg)
+
+    out = []
+    for i in range(cfg.n_clients):
+        # class subset: rotate so coverage is even across clients
+        classes = [(i + j) % cfg.num_classes
+                   for j in range(cfg.classes_per_client)]
+        per_class = int(quantities[i]) // cfg.classes_per_client
+        idx: List[int] = []
+        for c in classes:
+            if len(pools[c]) < per_class:
+                raise ValueError(
+                    f"class {c} exhausted for client {i}: "
+                    f"need {per_class}, have {len(pools[c])}")
+            take, pools[c] = pools[c][:per_class], pools[c][per_class:]
+            idx.extend(take)
+        idx = np.asarray(idx)
+        out.append((images[idx], labels[idx]))
+    return out
+
+
+def pad_clients(parts: List[Tuple[np.ndarray, np.ndarray]],
+                cap: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stack per-client datasets into fixed-capacity arrays.
+
+    Returns (images (C, cap, 28, 28, 1), labels (C, cap), n_valid (C,)).
+    Valid samples occupy the leading positions."""
+    c = len(parts)
+    img_shape = parts[0][0].shape[1:]
+    images = np.zeros((c, cap) + img_shape, np.float32)
+    labels = np.zeros((c, cap), np.int32)
+    n_valid = np.zeros((c,), np.int32)
+    for i, (im, lb) in enumerate(parts):
+        n = min(len(lb), cap)
+        images[i, :n] = im[:n]
+        labels[i, :n] = lb[:n]
+        n_valid[i] = n
+    return images, labels, n_valid

@@ -1,0 +1,215 @@
+"""The federated round engine (paper Alg. 1 + §6 simulator).
+
+One ``FLSimulation`` couples: the synthetic non-iid dataset partition,
+freeway mobility, the cellular/CWND network model, the Eq. 6 timing model,
+the fuzzy evaluator and one of the three selection schemes.  Each round:
+
+  1. broadcast: every participant receives the global model;
+  2. probe: every participant computes Eq. 7 (loss of the *global* model
+     over its local data, no update);
+  3. evaluate: fuzzy evaluation from (SQ, TA, CC, LF), locally;
+  4. select: dcs (neighbour election) / ccs-fuzzy (server top-n) /
+     random (server uniform);
+  5. train: selected clients run Eq. 1 local SGD;
+  6. deadline: models whose train+upload time exceeds the deadline are
+     discarded (stragglers);
+  7. aggregate: FedAvg (Eq. 2) over the survivors;
+  8. account: state-maintenance vs evaluation-exchange communication.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.mnist_cnn import CONFIG as CNN_CFG
+from repro.core.fuzzy import FuzzyEvaluator, FuzzyEvaluatorConfig
+from repro.core.selection import (ccs_fuzzy_select, ccs_random_select,
+                                  dcs_select)
+from repro.data.synthetic import make_dataset, train_test_split
+from repro.fl.aggregation import fedavg
+from repro.fl.client import dataset_loss, evaluate_accuracy, local_train
+from repro.fl.mobility import FreewayMobility, MobilityConfig
+from repro.fl.network import CellularNetwork, NetworkConfig
+from repro.fl.partition import PartitionConfig, pad_clients, partition
+from repro.fl.timing import TimingConfig, completes_before_deadline, \
+    training_time_s
+from repro.models.cnn import init_cnn
+
+
+@dataclass
+class FLSimConfig:
+    scheme: str = "dcs"                  # dcs | ccs-fuzzy | random
+    n_rounds: int = 20
+    n_clients_central: int = 5           # CCS/random pick (Table 3)
+    comm_range_m: float = 200.0
+    top_m: int = 2                       # per 200 m area (Table 3)
+    e_tau: float = 30.0
+    local_epochs: int = 2                # paper: 30; scaled for CPU budget
+    batch_size: int = 20
+    lr: float = 0.05
+    prox_mu: float = 0.0                 # >0 enables FedProx
+    deadline_s: float = 60.0             # see fl/timing.py docstring
+    model_bytes: float = 5.2e6
+    state_bytes: float = 100.0
+    eval_bytes: float = 30.0
+    state_interval_s: float = 1.0
+    slowdown_range: tuple = (1.0, 4.0)   # C_i heterogeneity
+    probe_samples: int = 256             # Eq. 7 subsample (paper: all
+                                         # samples; ranking-equivalent)
+    samples_per_class: int = 6600        # source pool size (>= per-class
+                                         # demand of the no-dup partition)
+    seed: int = 0
+    partition: PartitionConfig = field(default_factory=PartitionConfig)
+    mobility: MobilityConfig = field(default_factory=MobilityConfig)
+    network: NetworkConfig = field(default_factory=NetworkConfig)
+
+
+class FLSimulation:
+    def __init__(self, cfg: FLSimConfig,
+                 evaluator: Optional[FuzzyEvaluator] = None):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        images, labels = make_dataset(cfg.samples_per_class, seed=cfg.seed)
+        (tr_i, tr_l), (te_i, te_l) = train_test_split(images, labels,
+                                                      seed=cfg.seed)
+        self.test_images = jnp.asarray(te_i)
+        self.test_labels = jnp.asarray(te_l)
+
+        parts = partition(tr_i, tr_l, cfg.partition)
+        self.n = cfg.partition.n_clients
+        # two capacity groups keep the jitted local trainer cheap for the
+        # 45-sample vehicles
+        big_cap = int(np.ceil(cfg.partition.big_quantity
+                              / cfg.batch_size) * cfg.batch_size)
+        small_cap = int(np.ceil(max(cfg.partition.small_quantity, cfg.batch_size)
+                                / cfg.batch_size) * cfg.batch_size)
+        self.caps = np.array([big_cap if len(p[1]) > small_cap else small_cap
+                              for p in parts])
+        self.images, self.labels, self.n_valid = {}, {}, np.zeros(
+            self.n, np.int32)
+        padded = {}
+        for cap in sorted(set(self.caps)):
+            group = [i for i in range(self.n) if self.caps[i] == cap]
+            im, lb, nv = pad_clients([parts[i] for i in group], cap)
+            for j, i in enumerate(group):
+                self.images[i] = jnp.asarray(im[j])
+                self.labels[i] = jnp.asarray(lb[j])
+                self.n_valid[i] = nv[j]
+
+        self.slowdown = rng.uniform(*cfg.slowdown_range, self.n)
+        self.network = CellularNetwork(cfg.network)
+        # quality proxy for the 'extreme' placement: big data + fast compute
+        quality = (self.n_valid / self.n_valid.max()
+                   + 1.0 / self.slowdown)
+        self.mobility = FreewayMobility(
+            cfg.mobility, quality_rank=np.argsort(-quality))
+        self.evaluator = evaluator or FuzzyEvaluator(
+            FuzzyEvaluatorConfig(e_tau=cfg.e_tau))
+        self.params = init_cnn(jax.random.PRNGKey(cfg.seed), CNN_CFG)
+        self.key = jax.random.PRNGKey(cfg.seed + 1)
+
+    # ------------------------------------------------------------------
+    def _features(self, pos: np.ndarray) -> np.ndarray:
+        cfg = self.cfg
+        sq = self.n_valid / max(self.n_valid.max(), 1)
+        ta_raw = self.network.predicted_throughput(pos)
+        ta = ta_raw / max(ta_raw.max(), 1e-9)
+        cc_raw = 1.0 / self.slowdown
+        cc = cc_raw / cc_raw.max()
+        probe = self.cfg.probe_samples
+        lf_raw = np.array([
+            float(dataset_loss(
+                self.params, self.images[i][:probe], self.labels[i][:probe],
+                jnp.int32(min(int(self.n_valid[i]), probe)), batch=128))
+            for i in range(self.n)])
+        lf = lf_raw / max(lf_raw.max(), 1e-9)
+        return np.stack([sq, ta, cc, lf], axis=1).astype(np.float32)
+
+    def _select(self, pos: np.ndarray, evals: jnp.ndarray) -> np.ndarray:
+        cfg = self.cfg
+        if cfg.scheme == "dcs":
+            mask = dcs_select(jnp.asarray(pos), evals,
+                              comm_range=cfg.comm_range_m, top_m=cfg.top_m,
+                              e_tau=cfg.e_tau)
+        elif cfg.scheme == "ccs-fuzzy":
+            mask = ccs_fuzzy_select(evals, cfg.n_clients_central)
+        elif cfg.scheme == "random":
+            self.key, sub = jax.random.split(self.key)
+            mask = ccs_random_select(sub, self.n, cfg.n_clients_central)
+        else:
+            raise ValueError(cfg.scheme)
+        return np.asarray(mask)
+
+    def _comm_accounting(self, n_selected: int) -> Dict[str, float]:
+        """Per-round communication (bytes and time) per §4.2 / Fig. 9."""
+        cfg = self.cfg
+        msgs = self.n * cfg.deadline_s / cfg.state_interval_s
+        up_bytes = n_selected * cfg.model_bytes
+        if cfg.scheme in ("ccs-fuzzy",):
+            state_b = msgs * cfg.eval_bytes
+            state_t = msgs * 0.2
+        elif cfg.scheme == "random":
+            state_b = msgs * cfg.state_bytes
+            state_t = msgs * 0.2
+        else:                                   # dcs: DSRC evaluations only
+            state_b = msgs * cfg.eval_bytes
+            state_t = msgs * 0.04
+        return {"state_bytes": state_b, "upload_bytes": up_bytes,
+                "state_time_s": state_t}
+
+    # ------------------------------------------------------------------
+    def run_round(self, rnd: int) -> Dict[str, float]:
+        cfg = self.cfg
+        t = rnd * cfg.deadline_s
+        pos = self.mobility.positions(t)
+        feats = self._features(pos)
+        evals = self.evaluator.evaluate(jnp.asarray(feats))
+        mask = self._select(pos, evals)
+        sel = np.where(mask > 0)[0]
+
+        # local training (Eq. 1)
+        new_models, weights = [], []
+        train_t = training_time_s(
+            TimingConfig(cfg.local_epochs, cfg.batch_size,
+                         deadline_s=cfg.deadline_s),
+            self.slowdown, self.n_valid)
+        upload_t = self.network.upload_time_s(pos, cfg.model_bytes)
+        ok = completes_before_deadline(
+            TimingConfig(cfg.local_epochs, cfg.batch_size,
+                         deadline_s=cfg.deadline_s), train_t, upload_t)
+        n_straggler = 0
+        for i in sel:
+            if not ok[i]:
+                n_straggler += 1
+                continue
+            self.key, sub = jax.random.split(self.key)
+            cap = int(self.caps[i])
+            p_i, _ = local_train(
+                self.params, self.images[i], self.labels[i],
+                jnp.int32(self.n_valid[i]), sub, epochs=cfg.local_epochs,
+                batch_size=cfg.batch_size,
+                steps_per_epoch=cap // cfg.batch_size, lr=cfg.lr,
+                prox_mu=cfg.prox_mu)
+            new_models.append(p_i)
+            weights.append(float(self.n_valid[i]))
+
+        if new_models:                           # Eq. 2
+            self.params = fedavg(new_models, weights)
+
+        acc = evaluate_accuracy(self.params, self.test_images,
+                                self.test_labels)
+        row = {"round": rnd, "accuracy": acc, "n_selected": len(sel),
+               "n_aggregated": len(new_models), "n_straggler": n_straggler,
+               "mean_eval_selected": float(
+                   evals[sel].mean()) if len(sel) else 0.0}
+        row.update(self._comm_accounting(len(sel)))
+        return row
+
+    def run(self, n_rounds: Optional[int] = None) -> List[Dict[str, float]]:
+        n = n_rounds or self.cfg.n_rounds
+        return [self.run_round(r) for r in range(n)]

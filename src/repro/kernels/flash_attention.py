@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: flash attention (online-softmax, GQA, causal /
+sliding-window / prefix-LM masking).
+
+This is the EXPERIMENTS §Perf "next lever" for the dense architectures:
+the jnp flash path (models/attention.py) materialises every
+(q_chunk, kv_chunk) score tile to HBM at XLA:CPU fusion granularity,
+which is what dominates the train/prefill memory terms.  Here the tiles
+live in VMEM: grid (B*Hq, Sq/BQ, Skv/BK) with the kv axis innermost
+(sequential), running max/sum/accumulator in VMEM scratch, one HBM write
+of the normalized output per q block.
+
+GQA is handled in the index map: q head h reads kv head h // group.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ = 128
+BK = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+            scale: float, causal: bool, window: int, prefix_len: int,
+            sq: int, skv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0].astype(jnp.float32)                  # (BQ, Dh)
+    k = k_ref[0].astype(jnp.float32)                  # (BK, Dh)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    bq, bk = s.shape
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kv_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = (q_pos < sq) & (kv_pos < skv)
+    if causal:
+        ca = kv_pos <= q_pos
+        if window:
+            ca &= (q_pos - kv_pos) < window
+        if prefix_len:
+            ca |= kv_pos < prefix_len
+        ok &= ca
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_sc[...] = l_sc[...] * alpha + p.sum(axis=1)
+    acc_sc[...] = acc_sc[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_sc[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _fin():
+        o_ref[0] = (acc_sc[...]
+                    / jnp.maximum(l_sc[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int = 0,
+                           prefix_len: int = 0,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B, Sq, Hq, Dh); k, v: (B, Skv, Hkv, Dh) -> (B, Sq, Hq, Dh).
+
+    Positions are the natural 0..S-1 ranges (self-attention layout;
+    ``causal=False`` gives full bidirectional attention).
+    """
+    b, sq, hq, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+
+    bq = min(BQ, sq)
+    bk = min(BK, skv)
+    pad_q = (-sq) % bq
+    pad_k = (-skv) % bk
+    qq = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kk = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vv = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    sqp, skp = sq + pad_q, skv + pad_k
+
+    # (B*H, S, Dh) layouts
+    qr = qq.transpose(0, 2, 1, 3).reshape(b * hq, sqp, dh)
+    kr = kk.transpose(0, 2, 1, 3).reshape(b * hkv, skp, dh)
+    vr = vv.transpose(0, 2, 1, 3).reshape(b * hkv, skp, dh)
+
+    grid = (b * hq, sqp // bq, skp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          window=window, prefix_len=prefix_len,
+                          sq=sq, skv=skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda i, qj, kj: (i, qj, 0)),
+            pl.BlockSpec((1, bk, dh),
+                         lambda i, qj, kj, g=g: (i // g, kj, 0)),
+            pl.BlockSpec((1, bk, dh),
+                         lambda i, qj, kj, g=g: (i // g, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda i, qj, kj: (i, qj, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sqp, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    out = out.reshape(b, hq, sqp, dh).transpose(0, 2, 1, 3)
+    return out[:, :sq]

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: distributed neighbour election (paper Alg. 1).
+
+Vehicle i becomes a client iff its evaluation clears the threshold E_tau
+and fewer than ``top_m`` in-range vehicles have a strictly better
+evaluation (index tie-break).  This is an O(N^2) masked-counting problem:
+grid tiles of (BLOCK_I, BLOCK_J) compare a block of "my" vehicles against
+a block of candidate neighbours; a VMEM scratch accumulates the
+better-neighbour counts across the (sequential, innermost) j axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_I = 256
+BLOCK_J = 1024
+
+
+def _kernel(pos_i_ref, ev_i_ref, idx_i_ref, pos_j_ref, ev_j_ref, idx_j_ref,
+            out_ref, count_ref, *, comm_range: float, top_m: int,
+            e_tau: float, n_valid: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        count_ref[...] = jnp.zeros_like(count_ref)
+
+    pi = pos_i_ref[0, :]                         # (BI,)
+    ei = ev_i_ref[0, :]
+    ii = idx_i_ref[0, :]
+    pj = pos_j_ref[0, :]                         # (BJ,)
+    ej = ev_j_ref[0, :]
+    ij = idx_j_ref[0, :]
+
+    d = jnp.abs(pi[:, None] - pj[None, :])       # (BI, BJ)
+    valid = (d <= comm_range) & (ej[None, :] >= e_tau) & (ij[None, :] < n_valid)
+    better = (ej[None, :] > ei[:, None]) | (
+        (ej[None, :] == ei[:, None]) & (ij[None, :] < ii[:, None]))
+    count_ref[...] += jnp.sum((valid & better).astype(jnp.int32), axis=1)[None, :]
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _fin():
+        sel = (ei >= e_tau) & (count_ref[0, :] < top_m) & (ii < n_valid)
+        out_ref[...] = sel.astype(jnp.int32)[None, :]
+
+
+def neighbor_elect_pallas(pos: jax.Array, evals: jax.Array, *,
+                          comm_range: float, top_m: int, e_tau: float,
+                          interpret: bool = True) -> jax.Array:
+    """pos, evals: (N,) -> selected (N,) int32 (1 = becomes a client)."""
+    n = pos.shape[0]
+    pad = (-n) % BLOCK_I
+    bj = BLOCK_J if (n + pad) % BLOCK_J == 0 else BLOCK_I
+    padj = (-(n + pad)) % bj
+    np_ = n + pad + padj
+    # pad with sentinels far away / below threshold
+    posp = jnp.pad(pos.astype(jnp.float32), (0, np_ - n),
+                   constant_values=1e18)
+    evp = jnp.pad(evals.astype(jnp.float32), (0, np_ - n),
+                  constant_values=-1e18)
+    idx = jnp.arange(np_, dtype=jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, comm_range=float(comm_range),
+                          top_m=int(top_m), e_tau=float(e_tau), n_valid=n),
+        grid=(np_ // BLOCK_I, np_ // bj),
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_I), lambda i, j: (0, i)),   # pos_i
+            pl.BlockSpec((1, BLOCK_I), lambda i, j: (0, i)),   # ev_i
+            pl.BlockSpec((1, BLOCK_I), lambda i, j: (0, i)),   # idx_i
+            pl.BlockSpec((1, bj), lambda i, j: (0, j)),        # pos_j
+            pl.BlockSpec((1, bj), lambda i, j: (0, j)),        # ev_j
+            pl.BlockSpec((1, bj), lambda i, j: (0, j)),        # idx_j
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK_I), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, np_), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, BLOCK_I), jnp.int32)],
+        interpret=interpret,
+    )(posp[None, :], evp[None, :], idx[None, :],
+      posp[None, :], evp[None, :], idx[None, :])
+    return out[0, :n]

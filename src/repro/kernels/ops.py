@@ -1,0 +1,112 @@
+"""Jit'd dispatch wrappers over the Pallas kernels and their jnp paths.
+
+Selection order (env ``REPRO_KERNEL_IMPL`` or the ``impl=`` argument):
+- ``jnp``     : fast pure-jnp implementation (default on CPU — this
+                container); identical math to the oracle, chunked/vmapped.
+- ``pallas``  : Pallas kernel, ``interpret=True`` unless on a real TPU.
+- ``oracle``  : the naive reference from ``ref.py`` (tests only).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as kref
+
+
+def _impl(arg: Optional[str]) -> str:
+    return arg or os.environ.get("REPRO_KERNEL_IMPL", "jnp")
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------------------------
+# WKV6
+# --------------------------------------------------------------------------
+
+def wkv6(r, k, v, w, u, s0, impl: Optional[str] = None
+         ) -> Tuple[jax.Array, jax.Array]:
+    m = _impl(impl)
+    if m == "pallas":
+        from repro.kernels.wkv6 import wkv6_pallas
+        return wkv6_pallas(r, k, v, w, u, s0, interpret=_interpret())
+    if m == "oracle":
+        return kref.wkv6_ref(r, k, v, w, u, s0)
+    if m == "scan":
+        from repro.models.rwkv6 import wkv6_scan   # per-step (paper-naive)
+        return wkv6_scan(r, k, v, w, u, s0)
+    # default: chunked matmul formulation (TPU-native; see rwkv6.py)
+    from repro.models.rwkv6 import wkv6_chunked
+    return wkv6_chunked(r, k, v, w, u, s0)
+
+
+# --------------------------------------------------------------------------
+# Fuzzy evaluation
+# --------------------------------------------------------------------------
+
+def fuzzy_eval(x, means, sigmas, rule_table: np.ndarray,
+               rule_levels: np.ndarray, level_centers,
+               impl: Optional[str] = None) -> jax.Array:
+    m = _impl(impl)
+    if m == "pallas":
+        from repro.kernels.fuzzy_eval import fuzzy_eval_pallas
+        return fuzzy_eval_pallas(x, means, sigmas, rule_table, rule_levels,
+                                 level_centers, interpret=_interpret())
+    return kref.fuzzy_eval_ref(x, means, sigmas, rule_table, rule_levels,
+                               level_centers)
+
+
+# --------------------------------------------------------------------------
+# Neighbour election
+# --------------------------------------------------------------------------
+
+def neighbor_elect(pos, evals, *, comm_range: float, top_m: int,
+                   e_tau: float, impl: Optional[str] = None) -> jax.Array:
+    m = _impl(impl)
+    if m == "pallas":
+        from repro.kernels.neighbor_elect import neighbor_elect_pallas
+        return neighbor_elect_pallas(pos, evals, comm_range=comm_range,
+                                     top_m=top_m, e_tau=e_tau,
+                                     interpret=_interpret())
+    return kref.neighbor_elect_ref(pos, evals, comm_range=comm_range,
+                                   top_m=top_m, e_tau=e_tau)
+
+
+# --------------------------------------------------------------------------
+# Selective scan (Mamba-1)
+# --------------------------------------------------------------------------
+
+def selective_scan(x, dt, bmat, cmat, a, h0, impl: Optional[str] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    m = _impl(impl)
+    if m == "pallas":
+        from repro.kernels.selective_scan import selective_scan_pallas
+        return selective_scan_pallas(x, dt, bmat, cmat, a, h0,
+                                     interpret=_interpret())
+    return kref.selective_scan_ref(x, dt, bmat, cmat, a, h0)
+
+
+# --------------------------------------------------------------------------
+# Flash attention
+# --------------------------------------------------------------------------
+
+def flash_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=0,
+                    prefix_len=0, impl: Optional[str] = None) -> jax.Array:
+    """Self-attention layout (q_pos/kv_pos = arange).  The Pallas path is
+    the real TPU kernel; the jnp path is the GSPMD-friendly chunked
+    softmax in models/attention.py."""
+    m = _impl(impl)
+    if m == "pallas":
+        from repro.kernels.flash_attention import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      prefix_len=prefix_len,
+                                      interpret=_interpret())
+    from repro.models.attention import flash_attention as flash_jnp
+    return flash_jnp(q, k, v, q_pos, kv_pos, causal=causal, window=window,
+                     prefix_len=prefix_len)

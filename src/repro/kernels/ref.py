@@ -1,0 +1,131 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference).
+
+These are deliberately naive/direct transcriptions of the math — the
+kernels and the fast jnp paths are validated against these in
+``tests/test_kernels.py``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# WKV6 (RWKV-6 data-dependent-decay recurrence)
+# --------------------------------------------------------------------------
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, s0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Naive per-step scan.  r,k,v,w: (B,T,H,N); u: (H,N); s0: (B,H,N,N).
+
+    y_t = r_t · (S + u ⊙ k_t ⊗ v_t);  S <- diag(w_t)·S + k_t ⊗ v_t.
+    """
+    r = r.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[..., :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(z.swapaxes(0, 1) for z in (r, k, v, w))
+    sT, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1), sT
+
+
+# --------------------------------------------------------------------------
+# Fuzzy evaluator (Mamdani, singleton consequents, COG)
+# --------------------------------------------------------------------------
+
+def gaussian_membership(x: jax.Array, means: jax.Array,
+                        sigmas: jax.Array) -> jax.Array:
+    """x: (..., V); means/sigmas: (V, L) -> memberships (..., V, L)."""
+    d = x[..., :, None] - means
+    return jnp.exp(-0.5 * jnp.square(d / sigmas))
+
+
+def fuzzy_eval_ref(x: jax.Array, means: jax.Array, sigmas: jax.Array,
+                   rule_table: np.ndarray, rule_levels: np.ndarray,
+                   level_centers: jax.Array) -> jax.Array:
+    """Mamdani inference with min-conjunction, max-aggregation per output
+    level, COG over singleton level centers.
+
+    x: (P, V) normalized inputs in [0,1];
+    means/sigmas: (V, 3) Gaussian membership params;
+    rule_table: (R, V) int, linguistic index per variable per rule;
+    rule_levels: (R,) int in [0, 9), consequent level per rule;
+    level_centers: (9,) COG singleton positions.
+    Returns evaluations (P,) in [0, 1]-ish (scale of level_centers).
+    """
+    mu = gaussian_membership(x, means, sigmas)               # (P, V, 3)
+    p, v, _ = mu.shape
+    rt = jnp.asarray(rule_table)                             # (R, V)
+    sel = jnp.take_along_axis(
+        mu[:, None, :, :],                                   # (P,1,V,3)
+        rt[None, :, :, None], axis=3)[..., 0]                # (P,R,V)
+    firing = sel.min(axis=-1)                                # (P, R)
+    lv = jnp.asarray(rule_levels)                            # (R,)
+    onehot = jax.nn.one_hot(lv, 9, dtype=firing.dtype)       # (R, 9)
+    beta = (firing[:, :, None] * onehot).max(axis=1)         # (P, 9) max-agg
+    num = (beta * level_centers).sum(-1)
+    den = jnp.maximum(beta.sum(-1), 1e-9)
+    return num / den
+
+
+# --------------------------------------------------------------------------
+# Neighbour election (distributed client selection, paper Alg. 1)
+# --------------------------------------------------------------------------
+
+def neighbor_elect_ref(pos: jax.Array, evals: jax.Array, *,
+                       comm_range: float, top_m: int,
+                       e_tau: float) -> jax.Array:
+    """pos: (N,) 1-D road positions; evals: (N,).
+
+    Vehicle i is selected iff eval_i >= E_tau and eval_i is among the top-m
+    evaluations within its DSRC range (ties broken by lower index, matching
+    the evaluation-table semantics of §5.3).
+    Returns int32 (N,) 0/1.
+    """
+    d = jnp.abs(pos[:, None] - pos[None, :])                 # (N, N)
+    neighbour = d <= comm_range
+    valid = neighbour & (evals[None, :] >= e_tau)
+    better = (evals[None, :] > evals[:, None]) | (
+        (evals[None, :] == evals[:, None])
+        & (jnp.arange(pos.shape[0])[None, :] < jnp.arange(pos.shape[0])[:, None]))
+    n_better = (valid & better).sum(axis=1)
+    selected = (evals >= e_tau) & (n_better < top_m)
+    return selected.astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Selective scan (Mamba-1)
+# --------------------------------------------------------------------------
+
+def selective_scan_ref(x: jax.Array, dt: jax.Array, bmat: jax.Array,
+                       cmat: jax.Array, a: jax.Array,
+                       h0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Naive per-step scan.  x, dt: (B,T,Di); bmat, cmat: (B,T,N);
+    a: (Di,N); h0: (B,Di,N).
+
+    h_t = exp(dt_t * a) h_{t-1} + (dt_t * x_t) ⊗ B_t ;  y_t = h_t · C_t.
+    """
+    f32 = jnp.float32
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[..., None].astype(f32) * a)
+        h = da * h + (dt_t * x_t).astype(f32)[..., None] \
+            * b_t.astype(f32)[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t.astype(f32))
+        return h, y
+
+    xs = tuple(z.swapaxes(0, 1) for z in (x, dt, bmat, cmat))
+    hT, ys = jax.lax.scan(step, h0.astype(f32), xs)
+    return ys.swapaxes(0, 1), hT

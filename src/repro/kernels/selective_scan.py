@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: Mamba-1 selective scan (jamba's mamba layers).
+
+TPU adaptation of the CUDA ``selective_scan`` kernel: the CUDA version
+keeps per-channel state in registers with one thread block per (batch,
+channel-chunk); here the (BLOCK_D, N) state lives in VMEM scratch and the
+grid is (B, Di/BLOCK_D, T/CHUNK) with time innermost (sequential), so the
+state carries across time chunks of the same (batch, channel-block) and
+re-initialises at t == 0.
+
+This addresses the jamba train_4k roofline finding (EXPERIMENTS §Perf):
+mamba-1's per-(channel, state) decay cannot be chunked into matmuls the
+way WKV6 can (the pairwise decay tensor would be (C, C, Di, N)), so on
+TPU the per-step recurrence itself must be kept out of HBM — exactly what
+this kernel does and what the pure-jnp path cannot express.
+
+Channels sit on the lane axis (BLOCK_D multiple of 128); the state update
+is (BLOCK_D, N) element-wise VPU work per step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_D = 256
+CHUNK = 128
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, h0_ref, y_ref, hT_ref,
+            h_scratch):
+    tc = pl.program_id(2)
+
+    @pl.when(tc == 0)
+    def _init():
+        h_scratch[...] = h0_ref[0]
+
+    a = a_ref[...]                                   # (BLOCK_D, N)
+
+    def step(t, h):
+        dt_t = dt_ref[0, t, :]                       # (BLOCK_D,)
+        x_t = x_ref[0, t, :]
+        b_t = b_ref[0, t, :]                         # (N,)
+        c_t = c_ref[0, t, :]
+        da = jnp.exp(dt_t[:, None] * a)              # (BLOCK_D, N)
+        h = da * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_ref[0, t, :] = jnp.sum(h * c_t[None, :], axis=1)
+        return h
+
+    h = jax.lax.fori_loop(0, x_ref.shape[1], step, h_scratch[...])
+    h_scratch[...] = h
+
+    @pl.when(tc == pl.num_programs(2) - 1)
+    def _fin():
+        hT_ref[0] = h
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def selective_scan_pallas(x: jax.Array, dt: jax.Array, bmat: jax.Array,
+                          cmat: jax.Array, a: jax.Array, h0: jax.Array,
+                          interpret: bool = True
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """x, dt: (B, T, Di); bmat, cmat: (B, T, N); a: (Di, N);
+    h0: (B, Di, N).  Returns (y (B,T,Di) fp32, hT (B,Di,N) fp32).
+
+    h_t = exp(dt_t * a) h_{t-1} + (dt_t * x_t) B_t ;  y_t = h_t · C_t.
+    ``interpret=True`` executes on CPU (this container); pass False on TPU.
+    """
+    b, t, di = x.shape
+    n = bmat.shape[-1]
+    bd = min(BLOCK_D, di)
+    assert di % bd == 0, (di, bd)
+    chunk = CHUNK if t % CHUNK == 0 else t
+    f32 = jnp.float32
+    grid = (b, di // bd, t // chunk)
+
+    y, hT = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda i, j, k: (i, k, j)),   # x
+            pl.BlockSpec((1, chunk, bd), lambda i, j, k: (i, k, j)),   # dt
+            pl.BlockSpec((1, chunk, n), lambda i, j, k: (i, k, 0)),    # B
+            pl.BlockSpec((1, chunk, n), lambda i, j, k: (i, k, 0)),    # C
+            pl.BlockSpec((bd, n), lambda i, j, k: (j, 0)),             # a
+            pl.BlockSpec((1, bd, n), lambda i, j, k: (i, j, 0)),       # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda i, j, k: (i, k, j)),   # y
+            pl.BlockSpec((1, bd, n), lambda i, j, k: (i, j, 0)),       # hT
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, di), f32),
+            jax.ShapeDtypeStruct((b, di, n), f32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, n), f32)],
+        interpret=interpret,
+    )(x.astype(f32), dt.astype(f32), bmat.astype(f32), cmat.astype(f32),
+      a.astype(f32), h0.astype(f32))
+    return y, hT

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel for the WKV6 recurrence (RWKV-6 time mix).
+
+TPU adaptation of the CUDA wkv6 kernel: instead of one warp per (batch,
+head) with shared-memory staging, we put the (N, N) fp32 state in VMEM
+scratch and stream time in chunks of ``CHUNK`` steps per grid step.  The
+grid is (B*H, T/CHUNK); TPU grid execution is sequential with the last
+axis innermost, so the state scratch carries across time chunks of the
+same (b,h) and is re-initialised when the time index is 0.
+
+Layouts: all time-major per (b,h): r,k,v,w are reshaped to (B*H, T, N)
+before the call; N = head size = 64 (half a lane register — acceptable;
+the hot loop is VPU element-wise + small outer products).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 128
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                 y_ref, sT_ref, s_scratch):
+    tc = pl.program_id(1)
+
+    @pl.when(tc == 0)
+    def _init():
+        s_scratch[...] = s0_ref[0]
+
+    u = u_ref[0]                                   # (N,)
+
+    def step(t, s):
+        rt = r_ref[0, t, :]                        # (N,)
+        kt = k_ref[0, t, :]
+        vt = v_ref[0, t, :]
+        wt = w_ref[0, t, :]
+        kv = kt[:, None] * vt[None, :]             # (N, N)
+        y = jnp.sum((s + u[:, None] * kv) * rt[:, None], axis=0)
+        y_ref[0, t, :] = y
+        return wt[:, None] * s + kv
+
+    s = jax.lax.fori_loop(0, r_ref.shape[1], step, s_scratch[...])
+    s_scratch[...] = s
+
+    @pl.when(tc == pl.num_programs(1) - 1)
+    def _fin():
+        sT_ref[0] = s
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv6_pallas(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                u: jax.Array, s0: jax.Array,
+                interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """r,k,v,w: (B,T,H,N) — any float dtype; u: (H,N); s0: (B,H,N,N) fp32.
+
+    Returns (y (B,T,H,N) fp32, sT (B,H,N,N) fp32).
+    ``interpret=True`` executes the kernel body on CPU (this container);
+    on a real TPU pass ``interpret=False``.
+    """
+    b, t, h, n = r.shape
+    bh = b * h
+    tm = lambda z: (z.astype(jnp.float32).transpose(0, 2, 1, 3)
+                    .reshape(bh, t, n))
+    rr, kk, vv, ww = tm(r), tm(k), tm(v), tm(w)
+    uu = jnp.broadcast_to(u.astype(jnp.float32), (b, h, n)).reshape(bh, n)
+    ss = s0.astype(jnp.float32).reshape(bh, n, n)
+    chunk = CHUNK if t % CHUNK == 0 else t
+    grid = (bh, t // chunk)
+
+    y, sT = pl.pallas_call(
+        _wkv6_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),   # r
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),   # k
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),   # v
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),   # w
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),             # u
+            pl.BlockSpec((1, n, n), lambda i, j: (i, 0, 0)),       # s0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),   # y
+            pl.BlockSpec((1, n, n), lambda i, j: (i, 0, 0)),       # sT
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, n), jnp.float32),
+            jax.ShapeDtypeStruct((bh, n, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(rr, kk, vv, ww, uu, ss)
+    y = y.reshape(b, h, t, n).transpose(0, 2, 1, 3)
+    return y, sT.reshape(b, h, n, n)

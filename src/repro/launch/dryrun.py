@@ -1,0 +1,306 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+No real allocation: inputs are ShapeDtypeStructs; the 512 placeholder CPU
+devices exist only so jax.make_mesh can build the production meshes.
+
+Per combo this script records to JSONL:
+  - memory_analysis (argument/output/temp/peak bytes per device),
+  - cost_analysis flops / bytes accessed (per device, post-SPMD),
+  - collective bytes by op kind parsed from the compiled HLO,
+  - the three roofline terms and the dominant one (v5e constants),
+  - MODEL_FLOPS (6·N·D train / 2·N_active·D decode) and the useful-compute
+    ratio vs compiled HLO flops.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] --out results.jsonl
+"""
+import argparse
+import functools
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (ARCH_IDS, SHAPES, get_arch, get_shape)
+from repro.launch import hlo_cost
+from repro.launch import mesh as meshlib
+from repro.models import registry as R
+from repro.models import transformer as tfm
+from repro.serve.engine import make_serve_step
+from repro.sharding import (DEFAULT_RULES, batch_shardings, cache_shardings,
+                            logical_sharding, param_shardings, replicated)
+from repro.train.optim import OptConfig, adamw_init
+from repro.train.step import make_train_step
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# --------------------------------------------------------------------------
+# collective-bytes parser (post-SPMD HLO text)
+# --------------------------------------------------------------------------
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Sum output-shape bytes of every collective op, by kind.
+
+    Shapes in the post-SPMD module are per-device; '-start' async forms are
+    counted, their '-done' halves skipped.
+    """
+    by_kind = {k: 0 for k in _COLL_KINDS}
+    counts = {k: 0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        lhs, _, rhs = line.partition("=")
+        m = re.search(r"\b([a-z\-]+)(?:-start)?\(", rhs.strip())
+        if not m:
+            continue
+        op = m.group(1)
+        if op.endswith("-done"):
+            continue
+        kind = next((k for k in _COLL_KINDS if op == k or op == k + "-start"),
+                    None)
+        if kind is None:
+            continue
+        # output shape(s) are on the RHS head: "... = (f32[..],..) op(...)"
+        head = rhs.strip().split(" ", 1)[0] if rhs.strip().startswith("(") \
+            else rhs.strip().split(" ", 1)[0]
+        by_kind[kind] += _shape_bytes(head)
+        counts[kind] += 1
+    total = sum(by_kind.values())
+    # effective traffic: all-reduce moves ~2x its payload (RS+AG)
+    weighted = total + by_kind["all-reduce"]
+    return {"bytes_by_kind": by_kind, "counts": counts,
+            "total_bytes": total, "weighted_bytes": weighted}
+
+
+# --------------------------------------------------------------------------
+# roofline
+# --------------------------------------------------------------------------
+
+def roofline(flops_per_dev: float, hbm_bytes_per_dev: float,
+             coll_bytes_per_dev: float) -> Dict[str, Any]:
+    t_c = flops_per_dev / meshlib.PEAK_FLOPS_BF16
+    t_m = hbm_bytes_per_dev / meshlib.HBM_BW
+    t_n = coll_bytes_per_dev / meshlib.ICI_BW_PER_LINK
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_n, "collective"))[1]
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+            "dominant": dom, "bound_s": max(t_c, t_m, t_n)}
+
+
+def model_flops(cfg, shape) -> float:
+    n_active = cfg.num_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch          # decode: 1 token/seq
+
+
+# --------------------------------------------------------------------------
+# lowering
+# --------------------------------------------------------------------------
+
+def _params_shape(cfg):
+    return jax.eval_shape(lambda: tfm.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+                donate: bool = True,
+                rules: Optional[Dict] = None) -> Tuple[Any, Any]:
+    """Returns (lowered, meta) for one (arch x shape x mesh)."""
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+
+    p_shape = _params_shape(cfg)
+    p_sh = param_shardings(p_shape, mesh, cfg)
+
+    with mesh, logical_sharding(mesh, rules):
+        if shape.kind == "train":
+            opt = OptConfig()
+            o_shape = jax.eval_shape(adamw_init, p_shape)
+            o_sh = param_shardings(o_shape, mesh, cfg)
+            b_shape = R.train_batch_spec(cfg, shape)
+            b_sh = batch_shardings(b_shape, mesh)
+            step = make_train_step(cfg, shape, opt)
+            jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, None),
+                             donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(p_shape, o_shape, b_shape)
+        elif shape.kind == "prefill":
+            b_shape = R.prefill_batch_spec(cfg, shape)
+            b_sh = batch_shardings(b_shape, mesh)
+            cache_shape = jax.eval_shape(
+                functools.partial(tfm.prefill, cfg), p_shape, b_shape)[1]
+            c_sh = cache_shardings(cache_shape, mesh, cfg)
+            fn = functools.partial(tfm.prefill, cfg)
+            jitted = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                             out_shardings=(None, c_sh))
+            lowered = jitted.lower(p_shape, b_shape)
+        else:                                           # decode
+            tok_shape, cache_shape = R.decode_inputs_spec(cfg, shape)
+            c_sh = cache_shardings(cache_shape, mesh, cfg)
+            t_sh = batch_shardings(tok_shape, mesh)
+            step = make_serve_step(cfg, shape.seq_len)
+            jitted = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh["tokens"]),
+                             out_shardings=(None, c_sh),
+                             donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(p_shape, cache_shape,
+                                   tok_shape["tokens"])
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "kind": shape.kind}
+    return lowered, meta
+
+
+def run_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+              rules: Optional[Dict] = None,
+              verbose: bool = True) -> Dict[str, Any]:
+    t0 = time.time()
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    lowered, meta = lower_combo(arch, shape_name, multi_pod=multi_pod,
+                                rules=rules)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    xla_cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    cost = hlo_cost.analyze(hlo)              # trip-count-aware, per device
+
+    flops = float(cost.flops)
+    bytes_acc = float(cost.hbm_bytes)
+    coll = {"total_bytes": cost.collective_bytes,
+            "weighted_bytes": cost.collective_weighted,
+            "bytes_by_kind": cost.by_kind, "counts": cost.counts}
+    rl = roofline(flops, bytes_acc, coll["weighted_bytes"])
+    mf = model_flops(cfg, shape)
+    n_chips = 512 if multi_pod else 256
+    useful = mf / max(flops * n_chips, 1.0)
+
+    peak_bytes = (getattr(mem, "temp_size_in_bytes", 0)
+                  + getattr(mem, "argument_size_in_bytes", 0)
+                  + getattr(mem, "output_size_in_bytes", 0)
+                  - getattr(mem, "alias_size_in_bytes", 0))
+    row = dict(meta)
+    row.update({
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_per_dev": flops,
+        "hbm_bytes_per_dev": bytes_acc,
+        "collective_bytes_per_dev": coll["total_bytes"],
+        "collective_weighted_bytes": coll["weighted_bytes"],
+        "collective_by_kind": coll["bytes_by_kind"],
+        "collective_counts": coll["counts"],
+        "xla_cost_flops_once": float(xla_cost.get("flops", 0.0)),
+        "roofline": rl,
+        "model_flops_global": mf,
+        "useful_compute_ratio": useful,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "peak_bytes": peak_bytes,
+            "fits_16g": bool(peak_bytes < meshlib.HBM_BYTES_PER_CHIP),
+        },
+    })
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {row['mesh']}: "
+              f"compile {t_compile:.0f}s, "
+              f"flops/dev {flops:.3g}, hbm/dev {bytes_acc:.3g}B, "
+              f"coll/dev {coll['total_bytes']:.3g}B, "
+              f"dominant={rl['dominant']}, peak {peak_bytes/2**30:.2f} GiB",
+              flush=True)
+    return row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    combos = []
+    archs = ARCH_IDS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                combos.append((a, s, mp))
+
+    done = set()
+    if args.out and args.skip_existing and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+                except Exception:
+                    pass
+
+    failures = 0
+    for a, s, mp in combos:
+        meshname = "2x16x16" if mp else "16x16"
+        if (a, s, meshname) in done:
+            print(f"[dryrun] skip {a} x {s} x {meshname} (done)", flush=True)
+            continue
+        try:
+            row = run_combo(a, s, multi_pod=mp)
+        except Exception as e:                      # noqa: BLE001
+            failures += 1
+            row = {"arch": a, "shape": s, "mesh": meshname, "ok": False,
+                   "error": f"{type(e).__name__}: {e}"}
+            print(f"[dryrun] FAIL {a} x {s} x {meshname}: {row['error']}",
+                  flush=True)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(row) + "\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

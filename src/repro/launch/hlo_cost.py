@@ -1,0 +1,290 @@
+"""Static cost analysis of post-SPMD HLO text, with loop trip counts.
+
+XLA's built-in ``compiled.cost_analysis()`` counts while-loop bodies ONCE,
+which undercounts scanned-layer models by O(layers x grad_accum).  This
+analyzer parses the compiled module text and walks the call graph:
+
+- ``while`` ops multiply their body cost by the ``known_trip_count``
+  backend_config (1 if absent);
+- ``fusion`` ops contribute operand+output bytes at the fusion boundary
+  (the fused interior is not HBM traffic) and the MXU flops of any dots
+  inside the fused computation;
+- ``dot`` flops = 2 * numel(output) * contraction_size;
+- collectives (all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute, incl. async -start forms) accumulate output bytes,
+  weighted x2 for all-reduce (RS+AG traffic);
+- top-level non-fused element-wise ops contribute operand+output bytes.
+
+All shapes in a post-SPMD module are per-device, so every total this
+module reports is per-device.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _parse_shapes(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+def _bytes_of(text: str) -> int:
+    total = 0
+    for dt, shape in _parse_shapes(text):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _numel_of_first(text: str) -> int:
+    shapes = _parse_shapes(text)
+    if not shapes:
+        return 0
+    n = 1
+    for d in shapes[0][1]:
+        n *= d
+    return n
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0            # raw output bytes
+    collective_weighted: float = 0.0         # all-reduce x2
+    by_kind: Dict[str, float] = field(default_factory=dict)
+    counts: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.collective_weighted += other.collective_weighted * mult
+        for k, v in other.by_kind.items():
+            self.by_kind[k] = self.by_kind.get(k, 0.0) + v * mult
+        for k, v in other.counts.items():
+            self.counts[k] = self.counts.get(k, 0.0) + v * mult
+
+
+@dataclass
+class Op:
+    name: str
+    rhs: str              # full right-hand side text
+    out_text: str         # output type text (before opcode)
+    opcode: str
+    operands: List[str]
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Op]] = {}
+        self.shapes: Dict[Tuple[str, str], str] = {}   # (comp, op) -> type
+        self._parse(text)
+        self._cache: Dict[str, Cost] = {}
+
+    # ------------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            hdr = _COMP_HDR_RE.match(line.strip())
+            if hdr and line.strip().endswith("{"):
+                cur = hdr.group(1)
+                self.computations[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            # out type = prefix of rhs up to the opcode token
+            om = re.match(r"((?:\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)"
+                          r"(?:\s*))\s*([\w\-]+)\(", rhs)
+            if not om:
+                continue
+            out_text, opcode = om.group(1), om.group(2)
+            operands = re.findall(r"%([\w.\-]+)", rhs[om.end():])
+            self.computations[cur].append(
+                Op(name, rhs, out_text, opcode, operands))
+            self.shapes[(cur, name)] = out_text
+
+    # ------------------------------------------------------------------
+    def _operand_bytes(self, comp: str, op: Op) -> int:
+        total = 0
+        seen = 0
+        for o in op.operands:
+            t = self.shapes.get((comp, o))
+            if t is None:
+                continue
+            total += _bytes_of(t)
+            seen += 1
+            if seen >= 8:          # cap: variadic fusions w/ huge arg lists
+                break
+        return total
+
+    def _io_bytes(self, comp: str, op: Op) -> int:
+        """HBM traffic of one op: operands + output, EXCEPT when an operand
+        aliases the output (in-place dynamic-update-slice patterns on
+        loop-carried buffers): then only the non-aliased operands move,
+        twice (read slice inputs + write same amount)."""
+        out_b = _bytes_of(op.out_text)
+        out_shape = _parse_shapes(op.out_text)
+        aliased = None
+        op_bytes = []
+        for o in op.operands[:8]:
+            t = self.shapes.get((comp, o))
+            if t is None:
+                continue
+            b = _bytes_of(t)
+            if (aliased is None and out_shape
+                    and _parse_shapes(t) == out_shape
+                    and ("dynamic-update-slice" in op.rhs
+                         or "dynamic-update-slice" in op.name)):
+                aliased = b
+                continue
+            op_bytes.append(b)
+        if aliased is not None:
+            return 2 * sum(op_bytes)
+        return out_b + sum(op_bytes)
+
+    def _dot_flops(self, comp: str, op: Op) -> float:
+        out_numel = _numel_of_first(op.out_text)
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rhs)
+        k = 1
+        if m and op.operands:
+            lhs_t = self.shapes.get((comp, op.operands[0]))
+            if lhs_t:
+                shapes = _parse_shapes(lhs_t)
+                if shapes:
+                    dims = shapes[0][1]
+                    for d in m.group(1).split(","):
+                        if d and int(d) < len(dims):
+                            k *= dims[int(d)]
+        return 2.0 * out_numel * k
+
+    def _conv_flops(self, comp: str, op: Op) -> float:
+        out_numel = _numel_of_first(op.out_text)
+        if len(op.operands) >= 2:
+            kt = self.shapes.get((comp, op.operands[1]))
+            if kt:
+                shapes = _parse_shapes(kt)
+                if shapes:
+                    n = 1
+                    for d in shapes[0][1]:
+                        n *= d
+                    # kernel numel / out_channels ~ per-output MACs
+                    out_c = shapes[0][1][-1] if shapes[0][1] else 1
+                    return 2.0 * out_numel * max(n // max(out_c, 1), 1)
+        return 2.0 * out_numel
+
+    # ------------------------------------------------------------------
+    def _comp_flops_only(self, comp: str) -> float:
+        """MXU flops inside a (fused) computation."""
+        total = 0.0
+        for op in self.computations.get(comp, []):
+            if op.opcode == "dot":
+                total += self._dot_flops(comp, op)
+            elif op.opcode == "convolution":
+                total += self._conv_flops(comp, op)
+        return total
+
+    def cost_of(self, comp: str) -> Cost:
+        if comp in self._cache:
+            return self._cache[comp]
+        c = Cost()
+        self._cache[comp] = c                    # guards recursion
+        for op in self.computations.get(comp, []):
+            oc = op.opcode
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if oc in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all", "iota"):
+                continue
+            if base in COLLECTIVES:
+                b = _bytes_of(op.out_text)
+                w = 2.0 * b if base == "all-reduce" else float(b)
+                c.collective_bytes += b
+                c.collective_weighted += w
+                c.by_kind[base] = c.by_kind.get(base, 0.0) + b
+                c.counts[base] = c.counts.get(base, 0.0) + 1
+                c.hbm_bytes += b
+                continue
+            if oc.endswith("-done"):
+                continue
+            if oc == "while":
+                m = _TRIP_RE.search(op.rhs)
+                trip = int(m.group(1)) if m else 1
+                bm = re.search(r"body=%?([\w.\-]+)", op.rhs)
+                if bm and bm.group(1) in self.computations:
+                    c.add(self.cost_of(bm.group(1)), mult=trip)
+                continue
+            if oc in ("call", "custom-call", "async-start"):
+                tm = re.search(r"(?:to|called_computations?)=\{?%?([\w.\-]+)",
+                               op.rhs)
+                if tm and tm.group(1) in self.computations:
+                    c.add(self.cost_of(tm.group(1)))
+                else:
+                    c.hbm_bytes += _bytes_of(op.out_text) \
+                        + self._operand_bytes(comp, op)
+                continue
+            if oc == "conditional":
+                branches = re.findall(r"%([\w.\-]+)", op.rhs)
+                sub = [self.cost_of(b) for b in branches
+                       if b in self.computations]
+                if sub:
+                    best = max(sub, key=lambda s: s.flops + s.hbm_bytes)
+                    c.add(best)
+                continue
+            if oc == "fusion":
+                fm = re.search(r"calls=%?([\w.\-]+)", op.rhs)
+                if fm:
+                    c.flops += self._comp_flops_only(fm.group(1))
+                c.hbm_bytes += self._io_bytes(comp, op)
+                continue
+            if oc == "dot":
+                c.flops += self._dot_flops(comp, op)
+                c.hbm_bytes += self._io_bytes(comp, op)
+                continue
+            if oc == "convolution":
+                c.flops += self._conv_flops(comp, op)
+                c.hbm_bytes += self._io_bytes(comp, op)
+                continue
+            # generic op: moves its operands + output through HBM
+            c.hbm_bytes += self._io_bytes(comp, op)
+            c.flops += _numel_of_first(op.out_text)      # ~1 flop/elem
+        return c
+
+    def total(self) -> Cost:
+        return self.cost_of(self.entry)
+
+
+def analyze(hlo_text: str) -> Cost:
+    return HloModule(hlo_text).total()

@@ -1,0 +1,31 @@
+"""Production mesh construction (TPU v5e pods; 256 chips/pod).
+
+Defined as functions — importing this module never touches jax device
+state.  The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count
+=512 *before* any jax import to build these meshes on CPU.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int = 0, model: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests)."""
+    n = n_devices or len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# v5e hardware constants for the roofline (per chip / per link)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW_PER_LINK = 50e9            # B/s
+CHIPS_PER_POD = 256
+HBM_BYTES_PER_CHIP = 16 * 1024**3

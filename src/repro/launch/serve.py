@@ -1,0 +1,59 @@
+"""Serving driver: batched prefill + decode on any assigned architecture.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --reduced \
+      --batch 4 --prompt-len 64 --max-new 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_arch, scaled_down
+from repro.models import transformer as tfm
+from repro.serve.engine import generate
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="gemma-2b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = scaled_down(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = tfm.init_params(key, cfg)
+
+    batch = {"tokens": jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (args.batch, cfg.encoder_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["prefix"] = jax.random.normal(
+            key, (args.batch, cfg.num_prefix_tokens, cfg.d_model))
+
+    t0 = time.time()
+    toks, info = generate(cfg, params, batch, args.max_new,
+                          temperature=args.temperature, key=key)
+    toks = jax.block_until_ready(toks)
+    dt = time.time() - t0
+    n_tok = args.batch * args.max_new
+    print(f"[serve] {cfg.name}: generated {toks.shape} in {dt:.2f}s "
+          f"({n_tok/dt:.1f} tok/s)")
+    print(f"[serve] first sequence: {toks[0][:16].tolist()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

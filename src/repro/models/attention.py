@@ -1,0 +1,235 @@
+"""Attention: GQA/MQA, RoPE, sliding-window, prefix-LM, KV-cache decode.
+
+Training / prefill use a chunked flash-style softmax (``flash_attention``)
+so the (S, S) score matrix is never materialised — peak is one
+(B, H, q_chunk, kv_chunk) tile in fp32.  Decode is a single-query gather
+over a slot-indexed cache that supports both full and ring (sliding-window)
+layouts.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (Params, dense_init, rms_norm, rope,
+                                 COMPUTE_DTYPE, PARAM_DTYPE)
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def init_attention(key: jax.Array, cfg, d: int) -> Params:
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], d, hq * dh),
+         "wk": dense_init(ks[1], d, hkv * dh),
+         "wv": dense_init(ks[2], d, hkv * dh),
+         "wo": dense_init(ks[3], hq * dh, d)}
+    if cfg.qk_norm:
+        p["qn"] = jnp.zeros((dh,), PARAM_DTYPE)
+        p["kn"] = jnp.zeros((dh,), PARAM_DTYPE)
+    return p
+
+
+def init_cross_attention(key: jax.Array, cfg, d: int) -> Params:
+    return init_attention(key, cfg, d)
+
+
+# --------------------------------------------------------------------------
+# flash-style chunked attention (train / prefill)
+# --------------------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    q_pos: jax.Array, kv_pos: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    prefix_len: int = 0,
+                    q_chunk: int = 256, kv_chunk: int = 1024) -> jax.Array:
+    """q: (B,Sq,Hq,Dh); k,v: (B,Skv,Hkv,Dh); positions: (Sq,), (Skv,).
+
+    Mask: kv allowed iff  (not causal) or kv_pos <= q_pos, further
+    restricted by sliding ``window`` and relaxed for a bidirectional
+    ``prefix_len`` (prefix-LM / PaliGemma).
+    """
+    b, sq, hq, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    if sq % qc or skv % kc:            # irregular sizes: single chunk
+        qc, kc = sq, skv
+    nq, nk = sq // qc, skv // kc
+
+    qs = q.reshape(b, nq, qc, hkv, g, dh).transpose(1, 0, 3, 4, 2, 5)
+    ks_ = k.reshape(b, nk, kc, hkv, dh).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(b, nk, kc, hkv, dh).transpose(1, 0, 3, 2, 4)
+    qps = q_pos.reshape(nq, qc)
+    kps = kv_pos.reshape(nk, kc)
+
+    def q_body(_, q_in):
+        qc_, qp = q_in                                # (b,hkv,g,qc,dh), (qc,)
+        m0 = jnp.full((b, hkv, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, qc, dh), jnp.float32)
+
+        def kv_body(carry, kv_in):
+            m, l, acc = carry
+            kc_, vc_, kp = kv_in
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qc_, kc_,
+                           preferred_element_type=jnp.float32) * scale
+            ok = jnp.ones((qc, kc), bool)
+            if causal:
+                ok = kp[None, :] <= qp[:, None]
+                if window:
+                    ok &= (qp[:, None] - kp[None, :]) < window
+                if prefix_len:
+                    ok |= kp[None, :] < prefix_len
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1)
+            acc = (acc * alpha[..., None]
+                   + jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(vc_.dtype), vc_,
+                                preferred_element_type=jnp.float32))
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), (ks_, vs, kps))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, (qs, qps))
+    # outs: (nq, b, hkv, g, qc, dh) -> (b, sq, hq, dh)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, hq, dh)
+    return out
+
+
+# --------------------------------------------------------------------------
+# decode attention over a slot cache
+# --------------------------------------------------------------------------
+
+def make_kv_cache(batch: int, slots: int, hkv: int, dh: int,
+                  dtype=COMPUTE_DTYPE) -> Params:
+    return {
+        "k": jnp.zeros((batch, slots, hkv, dh), dtype),
+        "v": jnp.zeros((batch, slots, hkv, dh), dtype),
+        "pos": jnp.full((slots,), -1, jnp.int32),   # absolute position/slot
+        "idx": jnp.zeros((), jnp.int32),            # next absolute position
+    }
+
+
+def decode_attention(q: jax.Array, cache: Params, k_new: jax.Array,
+                     v_new: jax.Array, *, window: int = 0,
+                     prefix_len: int = 0) -> Tuple[jax.Array, Params]:
+    """One-token attention.  q,k_new,v_new: (B,1,H*,Dh).  Ring-writes into
+    the cache (slot = idx % slots) and attends over every valid slot."""
+    b, _, hq, dh = q.shape
+    slots = cache["k"].shape[1]
+    hkv = cache["k"].shape[2]
+    g = hq // hkv
+    idx = cache["idx"]
+    slot = idx % slots
+
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], idx[None], slot, axis=0)
+
+    scale = 1.0 / math.sqrt(dh)
+    qh = q.reshape(b, hkv, g, dh)
+    s = jnp.einsum("bhgd,bthd->bhgt", qh, k,
+                   preferred_element_type=jnp.float32) * scale
+    ok = (pos >= 0) & (pos <= idx)
+    if window:
+        ok &= (idx - pos) < window
+    if prefix_len:
+        ok |= (pos >= 0) & (pos < prefix_len)
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, hq, dh).astype(q.dtype)
+    return out, {"k": k, "v": v, "pos": pos, "idx": idx + 1}
+
+
+# --------------------------------------------------------------------------
+# full attention block (norm -> qkv -> rope -> attn -> out)
+# --------------------------------------------------------------------------
+
+def _project_qkv(cfg, p: Params, x: jax.Array, positions: jax.Array,
+                 *, use_rope: bool = True):
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, hq, dh)
+    k = (x @ p["wk"].astype(dt)).reshape(b, s, hkv, dh)
+    v = (x @ p["wv"].astype(dt)).reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qn"])
+        k = rms_norm(k, p["kn"])
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply_full(cfg, p: Params, x: jax.Array, positions: jax.Array, *,
+                    causal: bool = True, window: int = 0, prefix_len: int = 0,
+                    use_rope: bool = True,
+                    return_kv: bool = False):
+    """Self-attention over a full sequence (train / prefill)."""
+    q, k, v = _project_qkv(cfg, p, x, positions, use_rope=use_rope)
+    out = flash_attention(q, k, v, positions, positions, causal=causal,
+                          window=window, prefix_len=prefix_len)
+    b, s, _, _ = out.shape
+    y = out.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+    if return_kv:
+        from repro.sharding.api import constrain_kv
+        return y, (constrain_kv(k), constrain_kv(v))
+    return y
+
+
+def attn_apply_decode(cfg, p: Params, x: jax.Array, cache: Params, *,
+                      window: int = 0, prefix_len: int = 0,
+                      use_rope: bool = True):
+    """Self-attention for one new token against the cache."""
+    pos = cache["idx"][None]                       # (1,) current position
+    q, k, v = _project_qkv(cfg, p, x, pos, use_rope=use_rope)
+    out, cache = decode_attention(q, cache, k, v, window=window,
+                                  prefix_len=prefix_len)
+    b = x.shape[0]
+    y = out.reshape(b, 1, -1) @ p["wo"].astype(x.dtype)
+    return y, cache
+
+
+def cross_attn_apply(cfg, p: Params, x: jax.Array,
+                     enc_k: jax.Array, enc_v: jax.Array):
+    """Cross-attention to precomputed encoder K/V (whisper decoder)."""
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, hq, dh)
+    skv = enc_k.shape[1]
+    qp = jnp.arange(s)
+    kp = jnp.arange(skv)
+    out = flash_attention(q, enc_k.astype(dt), enc_v.astype(dt), qp, kp,
+                          causal=False)
+    return out.reshape(b, s, -1) @ p["wo"].astype(dt)
+
+
+def encoder_kv(cfg, p: Params, enc: jax.Array):
+    """Precompute cross-attention K/V from encoder states."""
+    b, s, d = enc.shape
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim
+    dt = enc.dtype
+    k = (enc @ p["wk"].astype(dt)).reshape(b, s, hkv, dh)
+    v = (enc @ p["wv"].astype(dt)).reshape(b, s, hkv, dh)
+    return k, v

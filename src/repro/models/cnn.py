@@ -1,0 +1,78 @@
+"""The paper's 7-layer MNIST CNN (conv,pool,conv,pool,flatten,fc,fc).
+
+This is the *local model* every FL participant trains (paper §6.1,
+~1.66M trainable variables).  Pure JAX; NHWC layout.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.mnist_cnn import CNNConfig
+from repro.models.layers import Params
+
+
+def init_cnn(key: jax.Array, cfg: CNNConfig) -> Params:
+    k = cfg.kernel_size
+    c1, c2 = cfg.conv_channels
+    ks = jax.random.split(key, 4)
+    flat = (cfg.image_size // 4) ** 2 * c2        # two 2x2 pools
+    he = lambda key, shape, fan_in: (
+        jax.random.normal(key, shape, jnp.float32) * math.sqrt(2.0 / fan_in))
+    return {
+        "conv1": {"w": he(ks[0], (k, k, cfg.channels, c1), k * k * cfg.channels),
+                  "b": jnp.zeros((c1,), jnp.float32)},
+        "conv2": {"w": he(ks[1], (k, k, c1, c2), k * k * c1),
+                  "b": jnp.zeros((c2,), jnp.float32)},
+        "fc1": {"w": he(ks[2], (flat, cfg.fc_width), flat),
+                "b": jnp.zeros((cfg.fc_width,), jnp.float32)},
+        "fc2": {"w": he(ks[3], (cfg.fc_width, cfg.num_classes), cfg.fc_width),
+                "b": jnp.zeros((cfg.num_classes,), jnp.float32)},
+    }
+
+
+def count_params(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def _maxpool2(x: jax.Array) -> jax.Array:
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_forward(params: Params, images: jax.Array) -> jax.Array:
+    """images: (B, 28, 28, 1) -> logits (B, 10)."""
+    x = images
+    for name in ("conv1", "conv2"):
+        p = params[name]
+        x = jax.lax.conv_general_dilated(
+            x, p["w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+        x = jax.nn.relu(x)
+        x = _maxpool2(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def cnn_loss(params: Params, images: jax.Array,
+             labels: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Categorical cross-entropy (paper §3.1)."""
+    logits = cnn_forward(params, images)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    nll = logz - gold
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return nll.mean(), {"acc": acc, "nll": nll.mean()}
+
+
+def cnn_sample_losses(params: Params, images: jax.Array,
+                      labels: jax.Array) -> jax.Array:
+    """Per-sample loss — Eq. 7's l_i numerator terms (no gradient update)."""
+    logits = cnn_forward(params, images)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return logz - gold

@@ -1,0 +1,162 @@
+"""Shared neural-net primitives (pure JAX, no flax).
+
+Parameters are plain nested dicts of jnp arrays.  All ``init_*`` functions
+return fp32 params; ``apply`` paths cast to the compute dtype (bf16 by
+default) and keep normalization / softmax accumulation in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+COMPUTE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, d_in: int, d_out: int,
+               scale: Optional[float] = None) -> jax.Array:
+    """Truncated-normal fan-in init (what llama-family models use)."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -3.0, 3.0, (d_in, d_out),
+                                        PARAM_DTYPE) * scale)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int) -> jax.Array:
+    return jax.random.normal(key, (vocab, d), PARAM_DTYPE) * 0.02
+
+
+# --------------------------------------------------------------------------
+# normalization
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dtype)
+
+
+def init_norm(cfg, d: int) -> Params:
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((d,), PARAM_DTYPE),
+                "b": jnp.zeros((d,), PARAM_DTYPE)}
+    return {"w": jnp.zeros((d,), PARAM_DTYPE)}   # rmsnorm stores (weight-1)
+
+
+def apply_norm(cfg, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["w"], p["b"])
+    return rms_norm(x, p["w"])
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply rotary embeddings.  x: (..., S, H, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-math.log(theta) *
+                    jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]                        # (...,S,1,half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return rot.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP (gated and plain)
+# --------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, cfg, d: int, d_ff: int) -> Params:
+    ks = jax.random.split(key, 3)
+    if cfg.hidden_act in ("silu", "geglu"):
+        return {"wi": dense_init(ks[0], d, d_ff),
+                "wg": dense_init(ks[1], d, d_ff),
+                "wo": dense_init(ks[2], d_ff, d)}
+    return {"wi": dense_init(ks[0], d, d_ff),
+            "wo": dense_init(ks[2], d_ff, d)}
+
+
+def apply_mlp(cfg, p: Params, x: jax.Array) -> jax.Array:
+    from repro.sharding.api import constrain
+    dt = x.dtype
+    ff_spec = ("batch",) + (None,) * (x.ndim - 2) + ("ff",)
+    h = constrain(x @ p["wi"].astype(dt), ff_spec)
+    if cfg.hidden_act == "silu":
+        h = jax.nn.silu(h) * constrain(x @ p["wg"].astype(dt), ff_spec)
+    elif cfg.hidden_act == "geglu":
+        h = jax.nn.gelu(h, approximate=True) * constrain(
+            x @ p["wg"].astype(dt), ff_spec)
+    elif cfg.hidden_act == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    elif cfg.hidden_act == "relu_sq":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(cfg.hidden_act)
+    return h @ p["wo"].astype(dt)
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+def chunked_cross_entropy(x: jax.Array, embed: jax.Array,
+                          labels: jax.Array, mask: jax.Array,
+                          head: Optional[jax.Array] = None,
+                          softcap: float = 0.0,
+                          chunk: int = 512) -> Tuple[jax.Array, jax.Array]:
+    """Cross-entropy without materialising (B,S,V) logits.
+
+    x: (B,S,D) final hidden states; embed: (V,D) used transposed (or
+    ``head`` (D,V) if untied).  Scans over sequence chunks; logits exist
+    only per-chunk.  Returns (sum_loss, sum_mask).
+    """
+    b, s, d = x.shape
+    w = head if head is not None else embed.T            # (D, V)
+    n_chunks = max(1, s // chunk)
+    while s % n_chunks:                                   # largest divisor
+        n_chunks -= 1
+    chunk = s // n_chunks
+    xs = x.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    ls = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    ms = mask.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(carry, inp):
+        xc, lc, mc = inp
+        logits = (xc @ w.astype(xc.dtype)).astype(jnp.float32)
+        if softcap:
+            logits = jnp.tanh(logits / softcap) * softcap
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return (carry[0] + nll.sum(), carry[1] + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (xs, ls, ms))
+    return tot, cnt

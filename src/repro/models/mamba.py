@@ -1,0 +1,149 @@
+"""Mamba-1 selective-state-space block (used by jamba's mamba layers).
+
+Selective scan over time is chunked (outer lax.scan over time chunks with
+``jax.checkpoint``) so training backprop stores per-chunk states, not
+per-step — the same treatment as the RWKV6 scan.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init, PARAM_DTYPE
+
+SCAN_CHUNK = 256
+
+
+def _dt_rank(cfg) -> int:
+    return -(-cfg.d_model // 16)          # ceil(d_model / 16)
+
+
+def init_mamba_layer(key: jax.Array, cfg) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state_dim
+    rk = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=PARAM_DTYPE), (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv_width, di),
+                                    PARAM_DTYPE) / math.sqrt(cfg.ssm_conv_width),
+        "conv_b": jnp.zeros((di,), PARAM_DTYPE),
+        "x_proj": dense_init(ks[2], di, rk + 2 * n),
+        "dt_proj": dense_init(ks[3], rk, di),
+        "dt_bias": jnp.full((di,), -4.6, PARAM_DTYPE),   # softplus^-1(0.01)
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), PARAM_DTYPE),
+        "out_proj": dense_init(ks[4], di, d),
+    }
+
+
+def init_mamba_state(cfg, batch: int) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, di), jnp.float32),
+        "h": jnp.zeros((batch, di, cfg.ssm_state_dim), jnp.float32),
+    }
+
+
+def _ssm_scan(xb: jax.Array, dt: jax.Array, bmat: jax.Array, cmat: jax.Array,
+              a: jax.Array, h0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Chunked selective scan.
+
+    xb, dt: (B,T,Di); bmat, cmat: (B,T,N); a: (Di,N); h0: (B,Di,N).
+    h_t = exp(dt_t a) h_{t-1} + dt_t * B_t ⊗ x_t;   y_t = h_t · C_t.
+    """
+    b, t, di = xb.shape
+    n = bmat.shape[-1]
+    c = SCAN_CHUNK if t % SCAN_CHUNK == 0 else t
+    nc = t // c
+
+    from repro.sharding.api import constrain
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        dt32 = dt_t.astype(jnp.float32)
+        da = jnp.exp(dt32[..., None] * a)                     # (B,Di,N)
+        h = da * h + (dt32 * x_t.astype(jnp.float32))[..., None] \
+            * b_t.astype(jnp.float32)[:, None, :]
+        h = constrain(h, ("batch", "ff", None))
+        y = jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32))
+        return h, y
+
+    @jax.checkpoint
+    def chunk(h, inp):
+        return jax.lax.scan(step, h, inp)
+
+    def outer(h, inp):
+        return chunk(h, inp)
+
+    # xs stay bf16 (HBM traffic /2); the state h is fp32 throughout.
+    r = lambda z: constrain(
+        z.reshape(b, nc, c, z.shape[-1]).transpose(1, 2, 0, 3),
+        (None, None, "batch", "ff" if z.shape[-1] == di else None))
+    hT, ys = jax.lax.scan(outer, h0, (r(xb), r(dt), r(bmat), r(cmat)))
+    return ys.transpose(2, 0, 1, 3).reshape(b, t, di).astype(xb.dtype), hT
+
+
+def mamba_apply(cfg, p: Params, x: jax.Array,
+                state: Optional[Params]) -> Tuple[jax.Array, Params]:
+    """x: (B,S,D).  S==1 with state => decode step; else train/prefill."""
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state_dim
+    rk = _dt_rank(cfg)
+    cw = cfg.ssm_conv_width
+    dt_ = x.dtype
+
+    from repro.sharding.api import constrain
+    xz = x @ p["in_proj"].astype(dt_)                    # (B,S,2Di)
+    xz = constrain(xz, ("batch", None, "ff"))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = constrain(xi, ("batch", None, "ff"))
+    z = constrain(z, ("batch", None, "ff"))
+
+    # causal depthwise conv, width cw
+    if s == 1 and state is not None:
+        hist = jnp.concatenate([state["conv"].astype(dt_), xi], axis=1)
+        conv_in = hist                                   # (B,cw,Di)
+        xc = jnp.einsum("bwd,wd->bd", conv_in, p["conv_w"].astype(dt_))
+        xc = (xc + p["conv_b"].astype(dt_))[:, None, :]
+        new_conv = hist[:, 1:, :].astype(jnp.float32)
+    else:
+        first = (jnp.zeros((b, cw - 1, di), dt_) if state is None
+                 else state["conv"].astype(dt_))
+        hist = jnp.concatenate([first, xi], axis=1)      # (B,S+cw-1,Di)
+        # depthwise causal conv — no (B,S,cw,Di) materialization
+        kernel = p["conv_w"].astype(dt_)[:, None, :]     # (cw, 1, Di)
+        xc = jax.lax.conv_general_dilated(
+            hist, kernel, (1,), "VALID",
+            dimension_numbers=("NHC", "HIO", "NHC"),
+            feature_group_count=di)
+        xc = constrain(xc + p["conv_b"].astype(dt_), ("batch", None, "ff"))
+        new_conv = hist[:, -(cw - 1):, :].astype(jnp.float32)
+    xc = jax.nn.silu(xc)
+
+    dbc = xc @ p["x_proj"].astype(dt_)                   # (B,S,rk+2N)
+    dt_r, bmat, cmat = jnp.split(dbc, [rk, rk + n], axis=-1)
+    delta = jax.nn.softplus(dt_r @ p["dt_proj"].astype(dt_)
+                            + p["dt_bias"].astype(dt_))  # (B,S,Di)
+    a = -jnp.exp(p["A_log"])                             # (Di,N)
+
+    h0 = (jnp.zeros((b, di, n), jnp.float32) if state is None
+          else state["h"])
+    if s == 1 and state is not None:
+        da = jnp.exp(delta[:, 0, :, None].astype(jnp.float32) * a)
+        h = da * h0 + (delta[:, 0] * xc[:, 0]).astype(jnp.float32)[..., None] \
+            * bmat[:, 0].astype(jnp.float32)[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0].astype(jnp.float32))[:, None]
+        hT = h
+    else:
+        y, hT = _ssm_scan(xc, delta, bmat, cmat, a, h0)
+    y = y.astype(dt_) + xc * p["D"].astype(dt_)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"].astype(dt_)
+    return out, {"conv": new_conv, "h": hT}

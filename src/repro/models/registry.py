@@ -1,0 +1,95 @@
+"""Model registry: arch id -> init / train_loss / prefill / decode_step,
+plus ShapeDtypeStruct input specs for every (arch x shape) combination.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, ShapeConfig, get_arch
+from repro.models import transformer as tfm
+from repro.models.layers import COMPUTE_DTYPE
+
+
+def init_params(key: jax.Array, cfg: ArchConfig):
+    return tfm.init_params(key, cfg)
+
+
+def train_loss_fn(cfg: ArchConfig) -> Callable:
+    return functools.partial(tfm.train_loss, cfg)
+
+
+def prefill_fn(cfg: ArchConfig) -> Callable:
+    return functools.partial(tfm.prefill, cfg)
+
+
+def decode_fn(cfg: ArchConfig, context: int) -> Callable:
+    window = 0
+    if cfg.sliding_window and context > cfg.sliding_window:
+        window = cfg.sliding_window
+    return functools.partial(tfm.decode_step, cfg, window=window)
+
+
+def init_cache(cfg: ArchConfig, batch: int, context: int):
+    return tfm.init_cache(cfg, batch, context)
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# --------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_spec(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    toks = s
+    batch: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        toks = s - cfg.num_prefix_tokens
+        batch["prefix"] = _sds((b, cfg.num_prefix_tokens, cfg.d_model),
+                               COMPUTE_DTYPE)
+    if cfg.family == "audio":
+        batch["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model),
+                               COMPUTE_DTYPE)
+    batch["tokens"] = _sds((b, toks), jnp.int32)
+    batch["targets"] = _sds((b, toks), jnp.int32)
+    batch["mask"] = _sds((b, toks), jnp.float32)
+    return batch
+
+
+def prefill_batch_spec(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    spec = train_batch_spec(cfg, shape)
+    spec.pop("targets")
+    spec.pop("mask")
+    return spec
+
+
+def decode_inputs_spec(cfg: ArchConfig, shape: ShapeConfig
+                       ) -> Tuple[Dict[str, Any], Any]:
+    """(tokens spec, cache spec) for a serve_step lowering."""
+    b = shape.global_batch
+    tokens = _sds((b, 1), jnp.int32)
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, shape.seq_len))
+    return {"tokens": tokens}, cache
+
+
+def make_concrete_batch(cfg: ArchConfig, shape: ShapeConfig,
+                        key: jax.Array, kind: str) -> Dict[str, Any]:
+    """Small concrete batch (for smoke tests with reduced configs)."""
+    spec = (train_batch_spec if kind == "train"
+            else prefill_batch_spec)(cfg, shape)
+    out = {}
+    for k, v in spec.items():
+        key, sub = jax.random.split(key)
+        if v.dtype == jnp.int32:
+            out[k] = jax.random.randint(sub, v.shape, 0, cfg.vocab_size)
+        elif k == "mask":
+            out[k] = jnp.ones(v.shape, v.dtype)
+        else:
+            out[k] = jax.random.normal(sub, v.shape, jnp.float32).astype(v.dtype)
+    return out

@@ -1,0 +1,255 @@
+"""RWKV-6 (Finch) block: data-dependent decay WKV recurrence + channel mix.
+
+The WKV6 recurrence is the compute hot-spot: ``kernels/wkv6.py`` holds the
+Pallas TPU kernel; this module calls ``kernels.ops.wkv6`` which dispatches
+to the pure-jnp chunked scan below (the oracle) unless the Pallas path is
+requested.  Training memory: the time scan is chunked (outer scan over
+chunks with ``jax.checkpoint``) so backprop stores only per-chunk states.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init, rms_norm, PARAM_DTYPE
+
+SCAN_CHUNK = 256
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def init_rwkv_layer(key: jax.Array, cfg) -> Params:
+    d = cfg.d_model
+    n = cfg.rwkv_head_size
+    h = d // n
+    r = cfg.rwkv_decay_lora
+    ks = jax.random.split(key, 12)
+    return {
+        # time-mix
+        "mu": jax.random.uniform(ks[0], (5, d), PARAM_DTYPE),   # lerp r,k,v,g,w
+        "wr": dense_init(ks[1], d, d),
+        "wk": dense_init(ks[2], d, d),
+        "wv": dense_init(ks[3], d, d),
+        "wg": dense_init(ks[4], d, d),
+        "wo": dense_init(ks[5], d, d),
+        "w0": jnp.full((d,), -6.0, PARAM_DTYPE),                # decay bias
+        "wA": dense_init(ks[6], d, r, scale=0.01),
+        "wB": dense_init(ks[7], r, d, scale=0.01),
+        "u": jax.random.normal(ks[8], (d,), PARAM_DTYPE) * 0.1,  # bonus
+        "ln_x": jnp.zeros((d,), PARAM_DTYPE),                   # per-head norm
+        # channel-mix
+        "mu_c": jax.random.uniform(ks[9], (2, d), PARAM_DTYPE),
+        "ck": dense_init(ks[10], d, cfg.d_ff),
+        "cv": dense_init(ks[11], cfg.d_ff, d),
+    }
+
+
+def init_rwkv_state(cfg, batch: int, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    n = cfg.rwkv_head_size
+    h = d // n
+    return {
+        "x_tm": jnp.zeros((batch, d), dtype),       # last input (time mix)
+        "x_cm": jnp.zeros((batch, d), dtype),       # last input (channel mix)
+        "S": jnp.zeros((batch, h, n, n), jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------
+# WKV6 recurrence — pure-jnp oracle (chunked scan)
+# --------------------------------------------------------------------------
+
+def wkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+              u: jax.Array, s0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """r,k,v,w: (B,T,H,N); u: (H,N); s0: (B,H,N,N) -> y (B,T,H,N), sT.
+
+    y_t = r_t · (S + u⊙k_t ⊗ v_t);  S ← diag(w_t)·S + k_t ⊗ v_t.
+    fp32 state; chunked with checkpoint for O(T/C) saved states.
+    """
+    b, t, h, n = r.shape
+    c = SCAN_CHUNK if t % SCAN_CHUNK == 0 else t
+    nc = t // c
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                         # (B,H,N) each
+        kv = kt[..., :, None] * vt[..., None, :]     # (B,H,N,N)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[..., :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    @jax.checkpoint
+    def chunk(s, inp):
+        rs, ks_, vs, ws = inp                        # (C,B,H,N)
+        return jax.lax.scan(step, s, (rs, ks_, vs, ws))
+
+    def outer(s, inp):
+        return chunk(s, inp)
+
+    rs = r.astype(jnp.float32).reshape(b, nc, c, h, n).transpose(1, 2, 0, 3, 4)
+    ks_ = k.astype(jnp.float32).reshape(b, nc, c, h, n).transpose(1, 2, 0, 3, 4)
+    vs = v.astype(jnp.float32).reshape(b, nc, c, h, n).transpose(1, 2, 0, 3, 4)
+    ws = w.astype(jnp.float32).reshape(b, nc, c, h, n).transpose(1, 2, 0, 3, 4)
+    sT, ys = jax.lax.scan(outer, s0, (rs, ks_, vs, ws))
+    y = ys.transpose(2, 0, 1, 3, 4).reshape(b, t, h, n)
+    return y.astype(r.dtype), sT
+
+
+def wkv6_chunked(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                 u: jax.Array, s0: jax.Array,
+                 chunk: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Chunked matmul formulation of the WKV6 recurrence (TPU-native).
+
+    Within a chunk of C steps with log-decays L_t = sum_{u<=t} log w_u:
+      y_t = (r_t ⊙ e^{L_{t-1}}) · S_0
+            + Σ_{s<t} [Σ_n r_t[n] k_s[n] e^{L_{t-1}[n]-L_s[n]}] v_s
+            + (r_t · (u ⊙ k_t)) v_t
+      S_C = diag(e^{L_C}) S_0 + Σ_s (k_s ⊙ e^{L_C - L_s}) v_s^T
+    Every exponent is <= 0 (L is non-increasing), so the chunk math is
+    numerically safe in fp32.  Converts T per-step state updates into
+    T/C MXU matmuls — the jnp shadow of the Pallas kernel's VMEM-resident
+    state (kernels/wkv6.py), and the structure a TPU actually wants.
+    """
+    b, t, h, n = r.shape
+    if chunk == 0:
+        # dry-run-swept optimum: larger chunks amortize per-chunk state
+        # traffic; the (C,C,N) score tensor grows with C — crossover ~8k
+        chunk = 128 if t <= 8192 else 256
+    c = chunk if t % chunk == 0 else t
+    nc = t // c
+    f32 = jnp.float32
+    rr, kk, vv, ww = (z.astype(f32) for z in (r, k, v, w))
+    uu = u.astype(f32)
+
+    # (nc, B, H, C, N) chunk-major
+    cm = lambda z: z.reshape(b, nc, c, h, n).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, wc = cm(rr), cm(kk), cm(vv), cm(ww)
+
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)          # s < t
+
+    @jax.checkpoint
+    def chunk_fn(s, inp):
+        rch, kch, vch, wch = inp                          # (B,H,C,N)
+        lw = jnp.log(jnp.maximum(wch, 1e-30))   # > FLT_MIN: no FTZ to -inf
+        lcum = jnp.cumsum(lw, axis=2)                     # L_t
+        lprev = lcum - lw                                 # L_{t-1}
+        r_hat = rch * jnp.exp(lprev)                      # decayed queries
+        # pairwise decay-weighted scores (exponents <= 0)
+        expdiff = jnp.exp(jnp.where(
+            tri[None, None, :, :, None],
+            lprev[:, :, :, None, :] - lcum[:, :, None, :, :], -1e30))
+        scores = jnp.einsum("bhtn,bhsn,bhtsn->bhts", rch, kch, expdiff)
+        bonus = jnp.einsum("bhtn,bhtn->bht", rch, uu[None, :, None, :] * kch)
+        y = (jnp.einsum("bhtn,bhnm->bhtm", r_hat, s)
+             + jnp.einsum("bhts,bhsm->bhtm", scores, vch)
+             + bonus[..., None] * vch)
+        # state to end of chunk
+        lC = lcum[:, :, -1:, :]                           # (B,H,1,N)
+        k_hat = kch * jnp.exp(lC - lcum)
+        s = (jnp.exp(lC[:, :, 0, :, None]) * s
+             + jnp.einsum("bhsn,bhsm->bhnm", k_hat, vch))
+        return s, y
+
+    sT, ys = jax.lax.scan(chunk_fn, s0.astype(f32), (rc, kc, vc, wc))
+    # ys: (nc, B, H, C, N) -> (B, T, H, N)
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, t, h, n)
+    return y.astype(r.dtype), sT
+
+
+def wkv6_step(r, k, v, w, u, s):
+    """Single decode step.  r..w: (B,H,N); s: (B,H,N,N)."""
+    kv = k[..., :, None] * v[..., None, :]
+    y = jnp.einsum("bhi,bhij->bhj", r, s + u[..., :, None] * kv)
+    s = w[..., :, None] * s + kv
+    return y, s
+
+
+# --------------------------------------------------------------------------
+# block apply
+# --------------------------------------------------------------------------
+
+def _decay(p: Params, xw: jax.Array) -> jax.Array:
+    """Data-dependent decay in (0,1): exp(-exp(w0 + tanh(x A) B))."""
+    dt = xw.dtype
+    lora = jnp.tanh(xw @ p["wA"].astype(dt)) @ p["wB"].astype(dt)
+    return jnp.exp(-jnp.exp(
+        (p["w0"].astype(jnp.float32) + lora.astype(jnp.float32))))
+
+
+def _heads(x: jax.Array, h: int, n: int) -> jax.Array:
+    return x.reshape(x.shape[:-1] + (h, n))
+
+
+def time_mix_apply(cfg, p: Params, x: jax.Array,
+                   state: Optional[Params]) -> Tuple[jax.Array, Dict]:
+    """x: (B,S,D).  state None => train/prefill from zeros."""
+    b, s, d = x.shape
+    n = cfg.rwkv_head_size
+    h = d // n
+    dt = x.dtype
+    if s == 1 and state is not None:
+        x_prev = state["x_tm"][:, None, :].astype(dt)
+    else:
+        first = (jnp.zeros((b, 1, d), dt) if state is None
+                 else state["x_tm"][:, None, :].astype(dt))
+        x_prev = jnp.concatenate([first, x[:, :-1]], axis=1)
+
+    mu = p["mu"].astype(dt)
+    xr, xk, xv, xg, xw = (x_prev + mu[i] * (x - x_prev) for i in range(5))
+    r = _heads(xr @ p["wr"].astype(dt), h, n)
+    k = _heads(xk @ p["wk"].astype(dt), h, n)
+    v = _heads(xv @ p["wv"].astype(dt), h, n)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    w = _heads(_decay(p, xw), h, n)
+    u = _heads(p["u"].astype(jnp.float32), h, n)
+
+    s0 = (jnp.zeros((b, h, n, n), jnp.float32) if state is None
+          else state["S"])
+    if s == 1:
+        y, sT = wkv6_step(r[:, 0].astype(jnp.float32),
+                          k[:, 0].astype(jnp.float32),
+                          v[:, 0].astype(jnp.float32),
+                          w[:, 0], u, s0)
+        y = y[:, None].astype(dt)
+    else:
+        from repro.kernels import ops as kops
+        y, sT = kops.wkv6(r, k, v, w.astype(jnp.float32), u, s0)
+        y = y.reshape(b, s, h, n)
+    y = y.reshape(b, s, d)
+    y = rms_norm(y, p["ln_x"])                       # stand-in for groupnorm
+    out = (y * g) @ p["wo"].astype(dt)
+    new_state = {"x_tm": x[:, -1, :], "S": sT}
+    return out, new_state
+
+
+def channel_mix_apply(cfg, p: Params, x: jax.Array,
+                      state: Optional[Params]) -> Tuple[jax.Array, Dict]:
+    b, s, d = x.shape
+    dt = x.dtype
+    if s == 1 and state is not None:
+        x_prev = state["x_cm"][:, None, :].astype(dt)
+    else:
+        first = (jnp.zeros((b, 1, d), dt) if state is None
+                 else state["x_cm"][:, None, :].astype(dt))
+        x_prev = jnp.concatenate([first, x[:, :-1]], axis=1)
+    mu = p["mu_c"].astype(dt)
+    xk = x_prev + mu[0] * (x - x_prev)
+    xr = x_prev + mu[1] * (x - x_prev)
+    kk = jnp.square(jax.nn.relu(xk @ p["ck"].astype(dt)))
+    out = jax.nn.sigmoid(xr) * (kk @ p["cv"].astype(dt))
+    return out, {"x_cm": x[:, -1, :]}
+
+
+def rwkv_layer_apply(cfg, p: Params, norms: Params, x: jax.Array,
+                     state: Optional[Params]) -> Tuple[jax.Array, Params]:
+    """Pre-norm residual block: time-mix then channel-mix."""
+    h1, st_tm = time_mix_apply(cfg, p, rms_norm(x, norms["n1"]), state)
+    x = x + h1
+    h2, st_cm = channel_mix_apply(cfg, p, rms_norm(x, norms["n2"]), state)
+    x = x + h2
+    new_state = {**st_tm, **st_cm}
+    return x, new_state

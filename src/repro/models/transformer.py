@@ -1,0 +1,578 @@
+"""Unified model assembly for all assigned architectures.
+
+One parameter/apply scheme covers the six families:
+
+- dense / moe:     L identical decoder layers  -> single lax.scan
+- ssm (rwkv6):     L identical rwkv blocks     -> single lax.scan
+- hybrid (jamba):  4 identical *groups* of 8 heterogeneous layers
+                   -> lax.scan over groups, unrolled inside
+- audio (whisper): encoder stack (scan) + decoder stack with cross-attn
+- vlm (paligemma): dense decoder consuming prefix patch embeddings with
+                   prefix-LM masking
+
+Three entry points per model (see ``registry.py``): ``train_loss``,
+``prefill`` and ``decode_step``.  Caches are slot-indexed pytrees whose
+leading axis matches the scan axis, so decode scans carry them as xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import mamba as mam
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv
+from repro.models.layers import (COMPUTE_DTYPE, PARAM_DTYPE, Params,
+                                 apply_mlp, apply_norm, chunked_cross_entropy,
+                                 dense_init, embed_init, init_mlp, init_norm)
+from repro.sharding.api import constrain
+
+ZERO_AUX = lambda: {"lb_loss": jnp.float32(0.0), "z_loss": jnp.float32(0.0)}
+
+
+# ==========================================================================
+# init
+# ==========================================================================
+
+def _init_dense_layer(key: jax.Array, cfg: ArchConfig, is_moe: bool) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"n1": init_norm(cfg, cfg.d_model),
+         "n2": init_norm(cfg, cfg.d_model),
+         "attn": attn.init_attention(k1, cfg, cfg.d_model)}
+    if is_moe:
+        p["moe"] = moe_mod.init_moe(k2, cfg, cfg.d_model)
+    else:
+        p["mlp"] = init_mlp(k3, cfg, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _init_mamba_layer(key: jax.Array, cfg: ArchConfig, is_moe: bool) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"n1": init_norm(cfg, cfg.d_model),
+         "n2": init_norm(cfg, cfg.d_model),
+         "mamba": mam.init_mamba_layer(k1, cfg)}
+    if is_moe:
+        p["moe"] = moe_mod.init_moe(k2, cfg, cfg.d_model)
+    else:
+        p["mlp"] = init_mlp(k3, cfg, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _init_rwkv_layer(key: jax.Array, cfg: ArchConfig) -> Params:
+    return {"n1": init_norm(cfg, cfg.d_model),
+            "n2": init_norm(cfg, cfg.d_model),
+            "rwkv": rwkv.init_rwkv_layer(key, cfg)}
+
+
+def _init_whisper_enc_layer(key: jax.Array, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"n1": init_norm(cfg, cfg.d_model),
+            "n2": init_norm(cfg, cfg.d_model),
+            "attn": attn.init_attention(k1, cfg, cfg.d_model),
+            "mlp": init_mlp(k2, cfg, cfg.d_model, cfg.d_ff)}
+
+
+def _init_whisper_dec_layer(key: jax.Array, cfg: ArchConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"n1": init_norm(cfg, cfg.d_model),
+            "nc": init_norm(cfg, cfg.d_model),
+            "n2": init_norm(cfg, cfg.d_model),
+            "attn": attn.init_attention(k1, cfg, cfg.d_model),
+            "xattn": attn.init_cross_attention(k2, cfg, cfg.d_model),
+            "mlp": init_mlp(k3, cfg, cfg.d_model, cfg.d_ff)}
+
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> Params:
+    """Build the full parameter pytree for any assigned architecture."""
+    keys = jax.random.split(key, 8)
+    params: Params = {
+        "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab_size)
+
+    if cfg.family == "ssm":                                   # rwkv6
+        lk = jax.random.split(keys[2], cfg.num_layers)
+        params["blocks"] = jax.vmap(
+            lambda k: _init_rwkv_layer(k, cfg))(lk)
+    elif cfg.family == "hybrid":                              # jamba
+        period = cfg.attn_layer_period
+        n_groups = cfg.num_layers // period
+        def one_group(k):
+            ks = jax.random.split(k, period)
+            return tuple(
+                (_init_dense_layer(ks[i], cfg, cfg.layer_is_moe(i))
+                 if cfg.layer_kind(i) == "attn"
+                 else _init_mamba_layer(ks[i], cfg, cfg.layer_is_moe(i)))
+                for i in range(period))
+        gk = jax.random.split(keys[2], n_groups)
+        params["blocks"] = jax.vmap(one_group)(gk)
+    elif cfg.family == "audio":                               # whisper
+        ek = jax.random.split(keys[3], cfg.encoder_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: _init_whisper_enc_layer(k, cfg))(ek),
+            "final_norm": init_norm(cfg, cfg.d_model),
+        }
+        dk = jax.random.split(keys[2], cfg.num_layers)
+        params["blocks"] = jax.vmap(
+            lambda k: _init_whisper_dec_layer(k, cfg))(dk)
+    else:                                                     # dense/moe/vlm
+        lk = jax.random.split(keys[2], cfg.num_layers)
+        params["blocks"] = jax.vmap(
+            lambda k: _init_dense_layer(k, cfg, cfg.layer_is_moe(0)))(lk)
+    return params
+
+
+# ==========================================================================
+# caches
+# ==========================================================================
+
+def init_cache(cfg: ArchConfig, batch: int, context: int) -> Params:
+    """Decode cache pytree.  ``context`` = total positions the serve step
+    must be able to attend over; sliding-window archs allocate only the
+    window (ring buffer)."""
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim
+
+    def kv_slots() -> int:
+        if cfg.sliding_window and context > cfg.sliding_window:
+            return cfg.sliding_window
+        return context
+
+    def stack(tree, n):
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), tree)
+
+    if cfg.family == "ssm":
+        st = rwkv.init_rwkv_state(cfg, batch)
+        return {"layers": stack(st, cfg.num_layers)}
+    if cfg.family == "hybrid":
+        period = cfg.attn_layer_period
+        n_groups = cfg.num_layers // period
+        group = tuple(
+            (attn.make_kv_cache(batch, kv_slots(), hkv, dh)
+             if cfg.layer_kind(i) == "attn"
+             else mam.init_mamba_state(cfg, batch))
+            for i in range(period))
+        return {"layers": stack(group, n_groups)}
+    if cfg.family == "audio":
+        kv = attn.make_kv_cache(batch, kv_slots(), hkv, dh)
+        xk = jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq, hkv, dh),
+                       COMPUTE_DTYPE)
+        return {"layers": stack(kv, cfg.num_layers),
+                "cross_k": xk, "cross_v": xk}
+    kv = attn.make_kv_cache(batch, kv_slots(), hkv, dh)
+    return {"layers": stack(kv, cfg.num_layers)}
+
+
+# ==========================================================================
+# layer bodies
+# ==========================================================================
+
+def _ffn(cfg: ArchConfig, lp: Params, x: jax.Array, is_moe: bool):
+    h = apply_norm(cfg, lp["n2"], x)
+    if is_moe:
+        y, aux = moe_mod.apply_moe(cfg, lp["moe"], h)
+        return y, {"lb_loss": aux["lb_loss"], "z_loss": aux["z_loss"]}
+    return apply_mlp(cfg, lp["mlp"], h), ZERO_AUX()
+
+
+def _dense_layer_full(cfg, lp, x, positions, *, is_moe, window=0,
+                      prefix_len=0, return_kv=False):
+    h = apply_norm(cfg, lp["n1"], x)
+    out = attn.attn_apply_full(cfg, lp["attn"], h, positions, window=window,
+                               prefix_len=prefix_len, return_kv=return_kv)
+    y, kv = out if return_kv else (out, None)
+    x = x + y * cfg.residual_scale
+    x = constrain(x, ("batch", None, "embed"))
+    y, aux = _ffn(cfg, lp, x, is_moe)
+    x = x + y * cfg.residual_scale
+    x = constrain(x, ("batch", None, "embed"))
+    return x, kv, aux
+
+
+def _dense_layer_decode(cfg, lp, x, cache, *, is_moe, window=0, prefix_len=0):
+    h = apply_norm(cfg, lp["n1"], x)
+    y, cache = attn.attn_apply_decode(cfg, lp["attn"], h, cache,
+                                      window=window, prefix_len=prefix_len)
+    x = x + y * cfg.residual_scale
+    y, _ = _ffn(cfg, lp, x, is_moe)
+    x = x + y * cfg.residual_scale
+    return x, cache
+
+
+def _mamba_layer(cfg, lp, x, state, *, is_moe):
+    h = apply_norm(cfg, lp["n1"], x)
+    y, new_state = mam.mamba_apply(cfg, lp["mamba"], h, state)
+    x = x + y * cfg.residual_scale
+    x = constrain(x, ("batch", None, "embed"))
+    y, aux = _ffn(cfg, lp, x, is_moe)
+    x = x + y * cfg.residual_scale
+    x = constrain(x, ("batch", None, "embed"))
+    return x, new_state, aux
+
+
+# ==========================================================================
+# stacks (scan over layers)
+# ==========================================================================
+
+def _sum_aux(a, b):
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def _run_dense_stack(cfg, params, x, positions, *, mode, cache=None,
+                     window=0, prefix_len=0, remat=False, context=0):
+    """mode: 'train' | 'prefill' | 'decode'.  Returns (x, new_cache, aux)."""
+    is_moe = cfg.layer_is_moe(0) if cfg.is_moe else False
+
+    if mode == "decode":
+        def body(h, xs):
+            lp, c = xs
+            h, c = _dense_layer_decode(cfg, lp, h, c, is_moe=is_moe,
+                                       window=window, prefix_len=prefix_len)
+            return h, c
+        x, new_layers = jax.lax.scan(body, x, (params["blocks"],
+                                               cache["layers"]))
+        return x, {"layers": new_layers}, ZERO_AUX()
+
+    build_cache = mode == "prefill"
+
+    def body(h, lp):
+        h, kv, aux = _dense_layer_full(cfg, lp, h, positions, is_moe=is_moe,
+                                       window=window, prefix_len=prefix_len,
+                                       return_kv=build_cache)
+        return h, (kv, aux)
+    if remat:
+        body = jax.checkpoint(body)
+    x, (kvs, auxs) = jax.lax.scan(body, x, params["blocks"])
+    aux = jax.tree.map(lambda a: a.sum(0), auxs)
+    new_cache = None
+    if build_cache:
+        new_cache = _kvs_to_cache(cfg, kvs, positions, context)
+    return x, new_cache, aux
+
+
+def _kvs_to_cache(cfg, kvs, positions, context: int = 0):
+    """Turn prefill (L,B,S,Hkv,Dh) K/V stacks into a slot cache pytree.
+
+    ``context`` is the total number of positions the cache must serve
+    (prompt + decode headroom); without it, the first decode step would
+    ring-wrap onto slot 0 and silently drop the first prompt token."""
+    k, v = kvs
+    l, b, s, hkv, dh = k.shape
+    slots = max(s, context)
+    if cfg.sliding_window and slots > cfg.sliding_window:
+        w = cfg.sliding_window
+        # keep the last `w` positions; their ring slots are a pure
+        # rotation (slot = pos % w and the tail is contiguous), so a
+        # static roll places them — no gather/scatter in the graph.
+        keep = min(w, s)
+        shift = int(s % w)
+        if keep < w:                      # short prompt: pad then roll
+            padk = jnp.zeros((l, b, w - keep, hkv, dh), COMPUTE_DTYPE)
+            k_tail = jnp.concatenate(
+                [k[:, :, -keep:].astype(COMPUTE_DTYPE), padk], axis=2)
+            v_tail = jnp.concatenate(
+                [v[:, :, -keep:].astype(COMPUTE_DTYPE), padk], axis=2)
+            tail_pos = jnp.concatenate(
+                [positions[-keep:].astype(jnp.int32),
+                 jnp.full((w - keep,), -1, jnp.int32)])
+            shift = int((s - keep) % w)
+        else:
+            k_tail = k[:, :, -w:].astype(COMPUTE_DTYPE)
+            v_tail = v[:, :, -w:].astype(COMPUTE_DTYPE)
+            tail_pos = positions[-w:].astype(jnp.int32)
+        k = jnp.roll(k_tail, shift, axis=2)
+        v = jnp.roll(v_tail, shift, axis=2)
+        pos = jnp.roll(tail_pos, shift)
+        slots = w
+    else:
+        pad = slots - s
+        if pad:
+            zk = jnp.zeros((l, b, pad, hkv, dh), COMPUTE_DTYPE)
+            k = jnp.concatenate([k.astype(COMPUTE_DTYPE), zk], axis=2)
+            v = jnp.concatenate([v.astype(COMPUTE_DTYPE), zk], axis=2)
+            pos = jnp.concatenate([positions.astype(jnp.int32),
+                                   jnp.full((pad,), -1, jnp.int32)])
+        else:
+            pos = positions.astype(jnp.int32)
+    cache = {
+        "k": k.astype(COMPUTE_DTYPE), "v": v.astype(COMPUTE_DTYPE),
+        "pos": jnp.broadcast_to(pos, (l, slots)),
+        "idx": jnp.full((l,), positions.shape[0], jnp.int32),
+    }
+    return {"layers": cache}
+
+
+def _run_rwkv_stack(cfg, params, x, *, mode, cache=None, remat=False):
+    if mode == "decode":
+        def body(h, xs):
+            lp, st = xs
+            h, st = rwkv.rwkv_layer_apply(cfg, lp["rwkv"],
+                                          {"n1": lp["n1"]["w"],
+                                           "n2": lp["n2"]["w"]}, h, st)
+            return h, st
+        x, new_states = jax.lax.scan(body, x, (params["blocks"],
+                                               cache["layers"]))
+        return x, {"layers": new_states}, ZERO_AUX()
+
+    def body(h, lp):
+        h, st = rwkv.rwkv_layer_apply(cfg, lp["rwkv"],
+                                      {"n1": lp["n1"]["w"],
+                                       "n2": lp["n2"]["w"]}, h, None)
+        return h, st
+    if remat:
+        body = jax.checkpoint(body)
+    x, states = jax.lax.scan(body, x, params["blocks"])
+    new_cache = {"layers": states} if mode == "prefill" else None
+    return x, new_cache, ZERO_AUX()
+
+
+def _run_hybrid_stack(cfg, params, x, positions, *, mode, cache=None,
+                      window=0, remat=False, context=0):
+    period = cfg.attn_layer_period
+
+    def group_body(h, xs):
+        if mode == "decode":
+            gp, gc = xs
+        else:
+            gp, gc = xs, tuple(None for _ in range(period))
+        new_caches = []
+        aux = ZERO_AUX()
+        for i in range(period):
+            lp = gp[i]
+            is_moe = cfg.layer_is_moe(i)
+            if cfg.layer_kind(i) == "attn":
+                if mode == "decode":
+                    h, c = _dense_layer_decode(cfg, lp, h, gc[i],
+                                               is_moe=is_moe, window=window)
+                    new_caches.append(c)
+                else:
+                    h, kv, a = _dense_layer_full(cfg, lp, h, positions,
+                                                 is_moe=is_moe, window=window,
+                                                 return_kv=(mode == "prefill"))
+                    aux = _sum_aux(aux, a)
+                    new_caches.append(kv)
+            else:
+                st = gc[i] if mode == "decode" else None
+                h, st, a = _mamba_layer(cfg, lp, h, st, is_moe=is_moe)
+                aux = _sum_aux(aux, a)
+                new_caches.append(st)
+        return h, (tuple(new_caches), aux)
+
+    body = group_body
+    if remat and mode == "train":
+        body = jax.checkpoint(group_body)
+
+    if mode == "decode":
+        x, (new_layers, _) = jax.lax.scan(body, x, (params["blocks"],
+                                                    cache["layers"]))
+        return x, {"layers": new_layers}, ZERO_AUX()
+
+    x, (outs, auxs) = jax.lax.scan(body, x, params["blocks"])
+    aux = jax.tree.map(lambda a: a.sum(0), auxs)
+    new_cache = None
+    if mode == "prefill":
+        # attn slots carry (k, v); mamba slots carry state dicts
+        layers = []
+        s = positions.shape[0]
+        for i in range(period):
+            if cfg.layer_kind(i) == "attn":
+                kv_cache = _kvs_to_cache(cfg, outs[i], positions,
+                                         context)["layers"]
+                layers.append(kv_cache)
+            else:
+                layers.append(outs[i])
+        new_cache = {"layers": tuple(layers)}
+    return x, new_cache, aux
+
+
+def _sinusoidal(s: int, d: int) -> jax.Array:
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def run_encoder(cfg, params, frames: jax.Array, *, remat=False) -> jax.Array:
+    """Whisper encoder over precomputed frame embeddings (B, S_enc, D)."""
+    x = frames.astype(COMPUTE_DTYPE)
+    x = x + _sinusoidal(x.shape[1], cfg.d_model).astype(x.dtype)
+    pos = jnp.arange(x.shape[1])
+
+    def body(h, lp):
+        a = attn.attn_apply_full(cfg, lp["attn"],
+                                 apply_norm(cfg, lp["n1"], h), pos,
+                                 causal=False, use_rope=False)
+        h = h + a
+        h = h + apply_mlp(cfg, lp["mlp"], apply_norm(cfg, lp["n2"], h))
+        h = constrain(h, ("batch", None, "embed"))
+        return h, None
+    if remat:
+        body = jax.checkpoint(body)
+    enc = params["encoder"]
+    x, _ = jax.lax.scan(body, x, enc["layers"])
+    return apply_norm(cfg, enc["final_norm"], x)
+
+
+def _run_whisper_decoder(cfg, params, x, positions, *, mode, enc=None,
+                         cache=None, window=0, remat=False, context=0):
+    if mode == "decode":
+        def body(h, xs):
+            lp, c, xk, xv = xs
+            a, c = attn.attn_apply_decode(cfg, lp["attn"],
+                                          apply_norm(cfg, lp["n1"], h), c,
+                                          window=window)
+            h = h + a
+            h = h + attn.cross_attn_apply(cfg, lp["xattn"],
+                                          apply_norm(cfg, lp["nc"], h), xk, xv)
+            h = h + apply_mlp(cfg, lp["mlp"], apply_norm(cfg, lp["n2"], h))
+            return h, c
+        x, new_layers = jax.lax.scan(
+            body, x, (params["blocks"], cache["layers"],
+                      cache["cross_k"], cache["cross_v"]))
+        new_cache = dict(cache, layers=new_layers)
+        return x, new_cache, ZERO_AUX()
+
+    build_cache = mode == "prefill"
+
+    def body(h, lp):
+        a = attn.attn_apply_full(cfg, lp["attn"],
+                                 apply_norm(cfg, lp["n1"], h), positions,
+                                 window=window, return_kv=build_cache)
+        a, kv = a if build_cache else (a, None)
+        h = h + a
+        xk, xv = attn.encoder_kv(cfg, lp["xattn"], enc)
+        h = h + attn.cross_attn_apply(cfg, lp["xattn"],
+                                      apply_norm(cfg, lp["nc"], h), xk, xv)
+        h = h + apply_mlp(cfg, lp["mlp"], apply_norm(cfg, lp["n2"], h))
+        h = constrain(h, ("batch", None, "embed"))
+        return h, (kv, (xk, xv))
+    if remat:
+        body = jax.checkpoint(body)
+    x, (kvs, xkvs) = jax.lax.scan(body, x, params["blocks"])
+    new_cache = None
+    if build_cache:
+        new_cache = _kvs_to_cache(cfg, kvs, positions, context)
+        new_cache["cross_k"] = xkvs[0].astype(COMPUTE_DTYPE)
+        new_cache["cross_v"] = xkvs[1].astype(COMPUTE_DTYPE)
+    return x, new_cache, ZERO_AUX()
+
+
+# ==========================================================================
+# forward passes
+# ==========================================================================
+
+def _embed(cfg, params, tokens):
+    x = params["embed"][tokens].astype(COMPUTE_DTYPE)
+    if cfg.scale_embed:
+        x = x * math.sqrt(cfg.d_model)
+    return x
+
+
+def _head_weights(cfg, params):
+    head = params.get("lm_head")
+    return params["embed"], head
+
+
+def forward(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array], *,
+            mode: str, cache: Optional[Params] = None, window: int = 0,
+            remat: bool = False, context: int = 0):
+    """Shared forward.  Returns (hidden (B,S,D), new_cache, aux, prefix_len)."""
+    prefix_len = 0
+    if cfg.family == "vlm" and mode != "decode":
+        prefix = batch["prefix"].astype(COMPUTE_DTYPE)       # (B,P,D)
+        tok_x = _embed(cfg, params, batch["tokens"])
+        x = jnp.concatenate([prefix, tok_x], axis=1)
+        prefix_len = cfg.num_prefix_tokens
+    elif mode == "decode":
+        x = _embed(cfg, params, batch["tokens"])             # (B,1,D)
+    else:
+        x = _embed(cfg, params, batch["tokens"])
+    x = constrain(x, ("batch", None, "embed"))
+    s = x.shape[1]
+    positions = jnp.arange(s)
+
+    if cfg.family == "ssm":
+        x, new_cache, aux = _run_rwkv_stack(cfg, params, x, mode=mode,
+                                            cache=cache, remat=remat)
+    elif cfg.family == "hybrid":
+        x, new_cache, aux = _run_hybrid_stack(cfg, params, x, positions,
+                                              mode=mode, cache=cache,
+                                              window=window, remat=remat,
+                                              context=context)
+    elif cfg.family == "audio":
+        enc = None
+        if mode != "decode":
+            enc = run_encoder(cfg, params, batch["frames"], remat=remat)
+        x, new_cache, aux = _run_whisper_decoder(cfg, params, x, positions,
+                                                 mode=mode, enc=enc,
+                                                 cache=cache, window=window,
+                                                 remat=remat, context=context)
+    else:
+        x, new_cache, aux = _run_dense_stack(cfg, params, x, positions,
+                                             mode=mode, cache=cache,
+                                             window=window,
+                                             prefix_len=prefix_len,
+                                             remat=remat, context=context)
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x, new_cache, aux, prefix_len
+
+
+# --------------------------------------------------------------------------
+
+MOE_LB_COEF = 0.01
+MOE_Z_COEF = 0.001
+
+
+def train_loss(cfg: ArchConfig, params: Params,
+               batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
+    """Next-token CE over the batch.  batch keys: tokens, targets, mask
+    (+ frames for audio, prefix for vlm)."""
+    x, _, aux, prefix_len = forward(cfg, params, batch, mode="train",
+                                    remat=True)
+    if prefix_len:
+        x = x[:, prefix_len:]
+    embed, head = _head_weights(cfg, params)
+    tot, cnt = chunked_cross_entropy(x, embed, batch["targets"],
+                                     batch["mask"].astype(jnp.float32),
+                                     head=head, softcap=cfg.logit_softcap)
+    ce = tot / jnp.maximum(cnt, 1.0)
+    loss = ce
+    if cfg.is_moe:
+        loss = loss + MOE_LB_COEF * aux["lb_loss"] + MOE_Z_COEF * aux["z_loss"]
+    metrics = {"ce": ce, "loss": loss, "tokens": cnt,
+               "lb_loss": aux["lb_loss"], "z_loss": aux["z_loss"]}
+    return loss, metrics
+
+
+def prefill(cfg: ArchConfig, params: Params,
+            batch: Dict[str, jax.Array],
+            context: int = 0, window: int = 0) -> Tuple[jax.Array, Params]:
+    """Run the full prompt; return last-position logits + decode cache.
+    ``context`` sizes the cache for prompt + decode headroom; ``window``
+    applies sliding-window masking during the prompt pass (matching a
+    windowed decode)."""
+    x, cache, _, _ = forward(cfg, params, batch, mode="prefill",
+                             context=context, window=window)
+    embed, head = _head_weights(cfg, params)
+    w = head if head is not None else embed.T
+    logits = (x[:, -1:] @ w.astype(x.dtype)).astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params,
+                tokens: jax.Array,
+                window: int = 0) -> Tuple[jax.Array, Params]:
+    """One decode step: tokens (B,1) -> logits (B,1,V), updated cache."""
+    x, cache, _, _ = forward(cfg, params, {"tokens": tokens}, mode="decode",
+                             cache=cache, window=window)
+    embed, head = _head_weights(cfg, params)
+    w = head if head is not None else embed.T
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    return logits, cache

@@ -1,0 +1,3 @@
+from repro.serve.engine import generate, make_serve_step
+
+__all__ = ["generate", "make_serve_step"]

@@ -1,0 +1,66 @@
+"""Serving engine: batched prefill + greedy/temperature decode loop.
+
+``serve_step`` (one token for the whole batch against the cache) is the
+function the decode-shape dry-runs lower; ``generate`` drives it with
+``lax.scan`` for end-to-end examples.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer as tfm
+from repro.models import registry as R
+
+
+def make_serve_step(cfg: ArchConfig, context: int) -> Callable:
+    """serve_step(params, cache, tokens (B,1)) -> (logits, cache)."""
+    window = 0
+    if cfg.sliding_window and context > cfg.sliding_window:
+        window = cfg.sliding_window
+
+    def serve_step(params, cache, tokens):
+        return tfm.decode_step(cfg, params, cache, tokens, window=window)
+
+    return serve_step
+
+
+def generate(cfg: ArchConfig, params, batch: Dict[str, jax.Array],
+             max_new_tokens: int, *, temperature: float = 0.0,
+             key: Optional[jax.Array] = None
+             ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Prefill the prompt then decode ``max_new_tokens`` greedily (or with
+    temperature sampling).  Returns (tokens (B, max_new_tokens), info)."""
+    prompt_len = batch["tokens"].shape[1]
+    if cfg.family == "vlm":
+        prompt_len += cfg.num_prefix_tokens
+    context = prompt_len + max_new_tokens
+    logits, cache = tfm.prefill(cfg, params, batch, context=context)
+    window = 0
+    if cfg.sliding_window and context > cfg.sliding_window:
+        window = cfg.sliding_window
+
+    def sample(lg, k):
+        if temperature <= 0.0:
+            return jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
+        return jax.random.categorical(k, lg[:, -1] / temperature).astype(
+            jnp.int32)
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    tok0 = sample(logits, key)
+
+    def body(carry, k):
+        tok, cache = carry
+        lg, cache = tfm.decode_step(cfg, params, cache, tok[:, None],
+                                    window=window)
+        nxt = sample(lg, k)
+        return (nxt, cache), nxt
+
+    keys = jax.random.split(key, max_new_tokens)
+    (last, cache), toks = jax.lax.scan(body, (tok0, cache), keys)
+    out = jnp.concatenate([tok0[:, None], toks.T], axis=1)[:, :max_new_tokens]
+    return out, {"cache": cache, "prompt_len": prompt_len}

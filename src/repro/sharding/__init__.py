@@ -1,0 +1,9 @@
+from repro.sharding.api import (DEFAULT_RULES, constrain, logical_sharding,
+                                resolve_pspec)
+from repro.sharding.rules import (batch_shardings, cache_shardings,
+                                  param_shardings, replicated)
+
+__all__ = [
+    "DEFAULT_RULES", "constrain", "logical_sharding", "resolve_pspec",
+    "batch_shardings", "cache_shardings", "param_shardings", "replicated",
+]

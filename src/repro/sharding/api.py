@@ -1,0 +1,124 @@
+"""Logical-axis sharding constraints.
+
+Model code annotates intermediates with *logical* axis names
+(``constrain(x, ("batch", None, "embed"))``).  The launcher activates a
+mesh + logical->physical rules; without an active context (CPU unit tests)
+``constrain`` is a no-op.  Axes whose dimension is not divisible by the
+assigned mesh axes are silently dropped (replicated) — uneven sharding is
+never requested.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisAssign = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _current() -> Tuple[Optional[Mesh], Dict[str, AxisAssign]]:
+    return (getattr(_state, "mesh", None), getattr(_state, "rules", {}))
+
+
+def current_mesh() -> Optional[Mesh]:
+    """The mesh activated by ``logical_sharding`` (None outside it)."""
+    return _current()[0]
+
+
+@contextlib.contextmanager
+def logical_sharding(mesh: Mesh, rules: Dict[str, AxisAssign]):
+    """Activate logical->physical rules for ``constrain`` calls."""
+    prev = _current()
+    _state.mesh, _state.rules = mesh, dict(rules)
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def _axis_size(mesh: Mesh, assign: AxisAssign) -> int:
+    if assign is None:
+        return 1
+    names = (assign,) if isinstance(assign, str) else assign
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def resolve_pspec(mesh: Mesh, rules: Dict[str, AxisAssign],
+                  logical: Sequence[Optional[str]],
+                  shape: Sequence[int]) -> P:
+    """Logical spec -> PartitionSpec, dropping non-divisible axes."""
+    out = []
+    used = set()
+    for dim, name in zip(shape, logical):
+        assign = rules.get(name) if name else None
+        if assign is None:
+            out.append(None)
+            continue
+        names = (assign,) if isinstance(assign, str) else tuple(assign)
+        names = tuple(a for a in names if a in mesh.shape and a not in used)
+        size = 1
+        for a in names:
+            size *= mesh.shape[a]
+        if not names or size == 1 or dim % size != 0:
+            out.append(None)
+            continue
+        used.update(names)
+        out.append(names[0] if len(names) == 1 else names)
+    return P(*out)
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    mesh, rules = _current()
+    if mesh is None or not rules:
+        return x
+    spec = resolve_pspec(mesh, rules, logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_kv(x: jax.Array) -> jax.Array:
+    """Constraint for prefill K/V tensors (B, S, Hkv, Dh): batch over the
+    batch axes, then heads over 'model' if divisible, else slots over
+    'model' — mirrors rules.cache_shardings so the scan-built cache keeps
+    a device-sized sharding instead of whatever GSPMD back-propagates."""
+    mesh, rules = _current()
+    if mesh is None:
+        return x
+    spec: list = [None, None, None, None]
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    bsz = 1
+    for a in baxes:
+        bsz *= mesh.shape[a]
+    if baxes and bsz > 1 and x.shape[0] % bsz == 0:
+        spec[0] = baxes if len(baxes) > 1 else baxes[0]
+    elif "data" in mesh.shape and x.shape[1] % mesh.shape["data"] == 0:
+        spec[1] = "data"
+    if "model" in mesh.shape and mesh.shape["model"] > 1:
+        m = mesh.shape["model"]
+        if x.shape[2] % m == 0:
+            spec[2] = "model"
+        elif spec[1] is None and x.shape[1] % m == 0:
+            spec[1] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+# Default logical rules for the production meshes.
+DEFAULT_RULES: Dict[str, AxisAssign] = {
+    "batch": ("pod", "data"),
+    "embed": None,          # residual stream replicated across 'model'
+    "heads": "model",
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "capacity": "data",     # MoE dispatch-buffer capacity dim
+    "tokens": ("pod", "data"),
+    "kv_seq": "data",
+}

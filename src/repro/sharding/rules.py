@@ -1,0 +1,173 @@
+"""Parameter / batch / cache sharding rules over the production mesh.
+
+Generic policy (per-arch overrides possible via ``overrides``):
+
+- 1-D params: replicated.
+- 2-D params (d_in, d_out): d_out -> 'model' if divisible; d_in -> 'data'
+  if divisible (ZeRO-style weight sharding; GSPMD all-gathers on use).
+- 3-D expert-stacked params (E, d_in, d_out): E -> 'model' (expert
+  parallelism), d_out -> 'data'.
+- batches: leading (batch) dim over ('pod','data').
+- KV caches: batch -> 'data' when divisible, else cache sequence/slots ->
+  'data' (long-context, batch=1); kv-heads -> 'model' when divisible.
+- SSM/RWKV states: batch -> 'data' if divisible; channel dim -> 'model'.
+
+Everything returns NamedSharding trees suitable for jit in_shardings.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def _div(dim: int, mesh: Mesh, axis) -> bool:
+    names = (axis,) if isinstance(axis, str) else axis
+    size = 1
+    for a in names:
+        if a not in mesh.shape:
+            return False
+        size *= mesh.shape[a]
+    return size > 1 and dim % size == 0
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def param_pspec(path: Tuple[str, ...], shape: Tuple[int, ...],
+                mesh: Mesh, cfg: Optional[ArchConfig] = None) -> P:
+    """Sharding for one parameter leaf.  ``path`` is the flattened key path
+    (strings), ``shape`` excludes any leading stacked-layer axes, which the
+    caller must strip — see ``param_shardings``."""
+    if len(shape) <= 1:
+        return P()
+    spec: list = [None] * len(shape)
+    if path and path[-1] == "embed":
+        # vocab-parallel embedding: gather lowers to mask+all-reduce
+        if _div(shape[0], mesh, "model"):
+            spec[0] = "model"
+        elif _div(shape[1], mesh, "data"):
+            spec[1] = "data"
+        return P(*spec)
+    is_expert = any(k in ("wi", "wg", "wo") for k in path) and len(shape) == 3
+    if is_expert:
+        # (E, d_in, d_out): experts over 'model', dim1 ZeRO-sharded over
+        # 'data' (matches the shard_map EP path's in_specs + all-gather)
+        if _div(shape[0], mesh, "model"):
+            spec[0] = "model"
+        if _div(shape[1], mesh, "data"):
+            spec[1] = "data"
+        return P(*spec)
+    # down-projections: contraction dim (dim0) is produced model-sharded
+    # (MLP hidden / attention heads / mamba inner) -> row-parallel: shard
+    # dim0 over 'model' so the matmul is local + one all-reduce of the
+    # (tokens, d_model) output, instead of all-gathering the big hidden.
+    if path and path[-1] in ("wo", "out_proj", "x_proj", "cv"):
+        if _div(shape[0], mesh, "model"):
+            spec[0] = "model"
+        if _div(shape[-1], mesh, "data"):
+            spec[-1] = "data"
+        return P(*spec)
+    # generic matmul weight: column-parallel + ZeRO on dim0
+    if _div(shape[-1], mesh, "model"):
+        spec[-1] = "model"
+    if _div(shape[0], mesh, "data") and len(shape) >= 2:
+        spec[0] = "data"
+    return P(*spec)
+
+
+def _stacked_depth(path: Tuple[str, ...]) -> int:
+    """How many leading axes are layer/group stacking (not weight dims)."""
+    return 1 if "blocks" in path or "layers" in path else 0
+
+
+def _path_strs(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh,
+                    cfg: Optional[ArchConfig] = None) -> Any:
+    """NamedSharding pytree for a params (or ShapeDtypeStruct) pytree."""
+    def one(path, leaf):
+        p = _path_strs(path)
+        shape = tuple(leaf.shape)
+        skip = _stacked_depth(p)
+        core = shape[skip:] if skip and len(shape) > skip else shape
+        spec = param_pspec(p, core, mesh, cfg)
+        full = P(*([None] * (len(shape) - len(core)) + list(spec)))
+        return NamedSharding(mesh, full)
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def batch_shardings(batch_shape: Any, mesh: Mesh) -> Any:
+    ba = _batch_axes(mesh)
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return NamedSharding(mesh, P())
+        spec = [None] * len(shape)
+        if _div(shape[0], mesh, ba):
+            spec[0] = ba if len(ba) > 1 else ba[0]
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_shardings(cache_shape: Any, mesh: Mesh,
+                    cfg: Optional[ArchConfig] = None) -> Any:
+    """Decode-cache sharding.  Leaves have a leading stacked-layer axis."""
+    def one(path, leaf):
+        p = _path_strs(path)
+        shape = tuple(leaf.shape)
+        spec: list = [None] * len(shape)
+        name = p[-1] if p else ""
+        if name in ("pos", "idx") or len(shape) <= 1:
+            return NamedSharding(mesh, P())
+        # layer-stacked leaves: dim0 = layer/group axis
+        b_dim = 1 if len(shape) >= 2 else None
+        if name in ("k", "v", "cross_k", "cross_v"):
+            # (L, B, T, Hkv, Dh)
+            if len(shape) == 5:
+                if _div(shape[1], mesh, "data"):
+                    spec[1] = "data"
+                elif _div(shape[2], mesh, "data"):
+                    spec[2] = "data"          # long-context: shard slots
+                if _div(shape[3], mesh, "model"):
+                    spec[3] = "model"         # kv heads
+                elif spec[2] is None and _div(shape[2], mesh, "model"):
+                    spec[2] = "model"         # fall back: shard slots
+        elif name in ("h", "S", "conv"):       # SSM/RWKV states
+            if len(shape) >= 3 and _div(shape[1], mesh, "data"):
+                spec[1] = "data"
+            # channel dim -> model
+            for d in range(2, len(shape)):
+                if _div(shape[d], mesh, "model"):
+                    spec[d] = "model"
+                    break
+        elif name in ("x_tm", "x_cm"):         # (L, B, D)
+            if len(shape) == 3:
+                if _div(shape[1], mesh, "data"):
+                    spec[1] = "data"
+                if _div(shape[2], mesh, "model"):
+                    spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def replicated(tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,9 @@
+from repro.train.optim import (OptConfig, adamw_init, adamw_update,
+                               schedule_lr, sgd_update)
+from repro.train.step import make_eval_step, make_train_step
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+
+__all__ = [
+    "OptConfig", "adamw_init", "adamw_update", "schedule_lr", "sgd_update",
+    "make_eval_step", "make_train_step", "load_checkpoint", "save_checkpoint",
+]

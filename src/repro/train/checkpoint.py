@@ -1,0 +1,67 @@
+"""Checkpointing: flat-key npz snapshots of arbitrary param pytrees.
+
+Host-local (single-process) persistence.  On a real multi-host pod this
+would be an Orbax/ocdbt store; the on-disk format here is deliberately
+simple: each leaf saved under its '/'-joined key path, plus a JSON
+manifest carrying pytree structure and step metadata.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params: Any, opt_state: Optional[Any] = None,
+                    step: int = 0, extra: Optional[Dict] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = {f"params/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        flat.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
+    np.savez(os.path.join(path, "arrays.npz"), **flat)
+    treedef_p = jax.tree_util.tree_structure(params)
+    manifest = {"step": step, "extra": extra or {},
+                "params_treedef": str(treedef_p)}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def load_checkpoint(path: str, params_like: Any,
+                    opt_like: Optional[Any] = None
+                    ) -> Tuple[Any, Optional[Any], int]:
+    """Restore into the structure of ``params_like`` (shape/dtype checked)."""
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    def restore(prefix: str, like: Any) -> Any:
+        flat_like = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path_, leaf in flat_like[0]:
+            key = prefix + "/".join(
+                str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                for p in path_)
+            arr = data[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"shape mismatch for {key}: "
+                                 f"{arr.shape} vs {leaf.shape}")
+            leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+        return jax.tree_util.tree_unflatten(flat_like[1], leaves)
+
+    params = restore("params/", params_like)
+    opt_state = restore("opt/", opt_like) if opt_like is not None else None
+    return params, opt_state, int(manifest["step"])

@@ -1,0 +1,100 @@
+"""Optimizers and LR schedules (pure JAX — no optax).
+
+AdamW with decoupled weight decay; schedules: linear-warmup cosine and
+MiniCPM's WSD (warmup-stable-decay, arXiv:2404.06395 §4).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"          # cosine | wsd | constant
+    wsd_decay_frac: float = 0.1       # last 10% of steps decay (WSD)
+    min_lr_frac: float = 0.1
+
+
+def schedule_lr(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    if cfg.schedule == "wsd":
+        decay_start = cfg.total_steps * (1.0 - cfg.wsd_decay_frac)
+        frac = jnp.clip((step - decay_start)
+                        / jnp.maximum(cfg.total_steps - decay_start, 1.0),
+                        0.0, 1.0)
+        # exponential-style anneal to min_lr_frac
+        stable = cfg.lr
+        decayed = cfg.lr * jnp.power(cfg.min_lr_frac, frac)
+        return warm * jnp.where(step < decay_start, stable, decayed)
+    # cosine
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1.0),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(math.pi * prog))
+    return warm * (cfg.lr * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos))
+
+
+def adamw_init(params: Params) -> Dict[str, Any]:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: OptConfig, grads: Params, state: Dict[str, Any],
+                 params: Params) -> Tuple[Params, Dict[str, Any], Dict]:
+    step = state["step"] + 1
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.betas
+
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.float32(1.0)
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    m = jax.tree.map(lambda mo, g: b1 * mo + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda vo, g: b2 * vo + (1 - b2) * jnp.square(g),
+                     state["v"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, mo, vo):
+        mhat = mo / bc1
+        vhat = vo / bc2
+        u = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:                      # decay matrices only
+            u = u + cfg.weight_decay * p
+        return p - lr * u
+
+    params = jax.tree.map(upd, params, m, v)
+    return params, {"m": m, "v": v, "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+# --------------------------------------------------------------------------
+# plain SGD — the paper's local update rule (Eq. 1)
+# --------------------------------------------------------------------------
+
+def sgd_update(params: Params, grads: Params, lr: float) -> Params:
+    return jax.tree.map(lambda p, g: p - lr * g, params, grads)

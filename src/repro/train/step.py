@@ -1,0 +1,66 @@
+"""Training step factory: grad-accumulation microbatching + AdamW.
+
+``make_train_step(cfg, shape, opt)`` returns a jit-able
+``train_step(params, opt_state, batch)`` that scans ``shape.grad_accum``
+microbatches (activation memory / grad_accum), accumulates fp32 grads,
+then applies one optimizer update.  This is the function the multi-pod
+dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer as tfm
+from repro.train.optim import OptConfig, adamw_update
+
+
+def _split_micro(batch: Dict[str, jax.Array], ga: int) -> Dict[str, jax.Array]:
+    """(GB, ...) -> (ga, GB/ga, ...) for every leaf."""
+    def r(x):
+        return x.reshape((ga, x.shape[0] // ga) + x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(cfg: ArchConfig, shape: ShapeConfig,
+                    opt: OptConfig) -> Callable:
+    ga = max(1, shape.grad_accum)
+    loss_fn = functools.partial(tfm.train_loss, cfg)
+
+    def train_step(params, opt_state, batch):
+        micro = _split_micro(batch, ga)
+
+        def micro_step(carry, mb):
+            g_acc, l_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                 g_acc, grads)
+            return (g_acc, l_acc + loss), metrics
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss_sum), ms = jax.lax.scan(
+            micro_step, (g0, jnp.float32(0.0)), micro)
+        grads = jax.tree.map(lambda g: g / ga, grads)
+        params, opt_state, opt_metrics = adamw_update(
+            opt, grads, opt_state, params)
+        metrics = {k: v.mean() for k, v in ms.items()}
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss_sum / ga
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig) -> Callable:
+    loss_fn = functools.partial(tfm.train_loss, cfg)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step

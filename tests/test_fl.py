@@ -1,0 +1,246 @@
+"""FL substrate tests: partition invariants (hypothesis), aggregation
+correctness, selection schemes, network predictor ordering, timing model,
+and a short end-to-end FL round."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.selection import (ccs_fuzzy_select, ccs_random_select,
+                                  dcs_select)
+from repro.data.synthetic import make_dataset, train_test_split
+from repro.fl.aggregation import fedavg, global_loss
+from repro.fl.mobility import FreewayMobility, MobilityConfig
+from repro.fl.network import CellularNetwork, NetworkConfig
+from repro.fl.partition import PartitionConfig, partition, pad_clients
+from repro.fl.timing import TimingConfig, completes_before_deadline, \
+    training_time_s
+
+
+# --------------------------------------------------------------------------
+# partition
+# --------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 9), st.sampled_from([2, 6, 9]))
+def test_partition_invariants(seed, classes_per_client):
+    images, labels = make_dataset(900, seed=seed)
+    cfg = PartitionConfig(n_clients=10, classes_per_client=classes_per_client,
+                          big_clients=4, big_quantity=400, small_quantity=45,
+                          seed=seed)
+    parts = partition(images, labels, cfg)
+    # no duplication: total assigned <= dataset, and indices unique per size
+    total = sum(len(p[1]) for p in parts)
+    assert total <= len(labels)
+    for im, lb in parts:
+        assert len(np.unique(lb)) <= classes_per_client
+    # unbalanced quantities honored (integer division slack allowed)
+    for i, (im, lb) in enumerate(parts):
+        want = cfg.big_quantity if i < cfg.big_clients else cfg.small_quantity
+        assert abs(len(lb) - want) <= classes_per_client
+
+
+def test_partition_no_duplicates_across_clients():
+    images, labels = make_dataset(900, seed=0)
+    # tag every sample with its index through a hash of pixel values
+    cfg = PartitionConfig(n_clients=6, classes_per_client=9, big_clients=2,
+                          big_quantity=360, small_quantity=45)
+    parts = partition(images, labels, cfg)
+    sigs = []
+    for im, _ in parts:
+        sigs.extend(im.reshape(len(im), -1).sum(1).round(4).tolist())
+    # sums collide rarely; allow a tiny number of accidental equalities
+    assert len(sigs) - len(set(sigs)) < len(sigs) * 0.01
+
+
+def test_pad_clients_shapes():
+    images, labels = make_dataset(300, seed=1)
+    cfg = PartitionConfig(n_clients=4, classes_per_client=2, big_clients=1,
+                          big_quantity=100, small_quantity=40)
+    parts = partition(images, labels, cfg)
+    im, lb, nv = pad_clients(parts, cap=120)
+    assert im.shape == (4, 120, 28, 28, 1)
+    assert (nv <= 120).all() and nv[0] >= 99
+
+
+# --------------------------------------------------------------------------
+# aggregation
+# --------------------------------------------------------------------------
+
+def test_fedavg_weighted_mean():
+    a = {"w": jnp.ones((3, 3)), "b": jnp.zeros((3,))}
+    b = {"w": jnp.zeros((3, 3)), "b": jnp.ones((3,))}
+    out = fedavg([a, b], [3.0, 1.0])
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.75)
+    np.testing.assert_allclose(np.asarray(out["b"]), 0.25)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 100))
+def test_fedavg_identity_and_convexity(n, seed):
+    rng = np.random.default_rng(seed)
+    models = [{"w": jnp.asarray(rng.normal(size=(4,)).astype(np.float32))}
+              for _ in range(n)]
+    weights = rng.uniform(0.1, 5.0, n).tolist()
+    out = fedavg(models, weights)
+    stacked = np.stack([np.asarray(m["w"]) for m in models])
+    lo, hi = stacked.min(0), stacked.max(0)
+    w = np.asarray(out["w"])
+    assert (w >= lo - 1e-5).all() and (w <= hi + 1e-5).all()
+    same = fedavg([models[0]] * 3, [1.0, 2.0, 3.0])
+    np.testing.assert_allclose(np.asarray(same["w"]),
+                               np.asarray(models[0]["w"]), rtol=1e-6)
+
+
+def test_global_loss_eq3():
+    losses = jnp.array([1.0, 3.0])
+    weights = jnp.array([1.0, 1.0])
+    assert float(global_loss(losses, weights)) == pytest.approx(2.0)
+
+
+# --------------------------------------------------------------------------
+# selection
+# --------------------------------------------------------------------------
+
+def test_ccs_fuzzy_picks_top():
+    ev = jnp.array([5.0, 50.0, 20.0, 90.0, 1.0])
+    mask = ccs_fuzzy_select(ev, 2)
+    assert np.where(np.asarray(mask))[0].tolist() == [1, 3]
+
+
+def test_ccs_random_count_and_distribution():
+    key = jax.random.PRNGKey(0)
+    counts = np.zeros(10)
+    for i in range(200):
+        key, sub = jax.random.split(key)
+        mask = np.asarray(ccs_random_select(sub, 10, 3))
+        assert mask.sum() == 3
+        counts += mask
+    assert counts.min() > 20           # every client gets picked sometimes
+
+
+def test_dcs_respects_range():
+    # two separated clusters of 5; top_m=1 per range => 2 selected
+    pos = jnp.concatenate([jnp.zeros(5), jnp.full((5,), 900.0)])
+    ev = jnp.arange(10, dtype=jnp.float32) + 1
+    mask = np.asarray(dcs_select(pos, ev, comm_range=100.0, top_m=1,
+                                 e_tau=0.0))
+    assert mask.sum() == 2
+    assert mask[4] == 1 and mask[9] == 1
+
+
+# --------------------------------------------------------------------------
+# mobility / network / timing
+# --------------------------------------------------------------------------
+
+def test_mobility_stays_on_road():
+    mob = FreewayMobility(MobilityConfig(n_vehicles=20, seed=3))
+    for t in (0.0, 10.0, 1000.0):
+        x = mob.positions(t)
+        assert ((x >= 0) & (x < 1000.0)).all()
+
+
+def test_mobility_extreme_clusters():
+    cfg = MobilityConfig(n_vehicles=20, distribution="extreme", seed=1)
+    rank = np.arange(20)
+    mob = FreewayMobility(cfg, quality_rank=rank)
+    x = mob.positions(0.0)
+    assert (x[rank[:10]] < 200.0).all()
+    assert (x[rank[10:]] > 800.0).all()
+
+
+def test_network_rate_bounds_and_ordering():
+    net = CellularNetwork(NetworkConfig(seed=0))
+    pos = np.linspace(0, 1000, 200)
+    rate = net.true_rate_bps(pos)
+    assert rate.min() >= 0.24e6 * 0.3          # shadowing slack
+    assert rate.max() <= 10.4e6 * 3.0
+    # predictor preserves ordering (Spearman) — the paper's §5.1 criterion
+    pred = net.predicted_throughput(pos)
+    def rank(a):
+        return np.argsort(np.argsort(a))
+    rho = np.corrcoef(rank(rate), rank(pred))[0, 1]
+    assert rho > 0.6, rho
+
+
+def test_timing_eq6_scaling():
+    cfg = TimingConfig(epochs=30, batch_size=20, b_exe_s=0.06)
+    t = training_time_s(cfg, np.array([1.0]), np.array([4500]))
+    assert t[0] == pytest.approx(30 * 4500 * 0.06 / 20)
+    # doubling capability ratio doubles the time; more samples cost more
+    t2 = training_time_s(cfg, np.array([2.0]), np.array([4500]))
+    assert t2[0] == pytest.approx(2 * t[0])
+    ok = completes_before_deadline(TimingConfig(deadline_s=1e9),
+                                   t, np.array([1.0]))
+    assert ok.all()
+
+
+# --------------------------------------------------------------------------
+# end-to-end round
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_fl_round_end_to_end():
+    from repro.fl.rounds import FLSimConfig, FLSimulation
+    cfg = FLSimConfig(
+        scheme="dcs", n_rounds=2, local_epochs=1, samples_per_class=260,
+        partition=PartitionConfig(n_clients=10, big_clients=3,
+                                  big_quantity=120, small_quantity=40,
+                                  classes_per_client=9),
+        mobility=MobilityConfig(n_vehicles=10),
+    )
+    sim = FLSimulation(cfg)
+    hist = sim.run(2)
+    assert len(hist) == 2
+    assert 0.0 <= hist[-1]["accuracy"] <= 1.0
+    assert hist[-1]["n_selected"] >= 1
+    # DCS accounting: DSRC latency, no cloud state stream
+    assert hist[0]["state_time_s"] < 0.2 * 10 * cfg.deadline_s \
+        / cfg.state_interval_s
+
+
+# --------------------------------------------------------------------------
+# FedProx
+# --------------------------------------------------------------------------
+
+def test_fedprox_pulls_towards_global():
+    """With large prox_mu the local update stays near the global model;
+    with mu=0 it drifts further (FedProx [17], cited by the paper)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.fl.client import local_train
+    from repro.models.cnn import init_cnn
+    from repro.configs.mnist_cnn import CONFIG as CNN_CFG
+    from repro.data.synthetic import make_dataset
+
+    images, labels = make_dataset(20, seed=5)
+    images, labels = jnp.asarray(images[:100]), jnp.asarray(labels[:100])
+    g = init_cnn(jax.random.PRNGKey(0), CNN_CFG)
+    key = jax.random.PRNGKey(1)
+
+    def dist(a, b):
+        return float(sum(jnp.sum(jnp.square(x - y)) for x, y in
+                         zip(jax.tree.leaves(a), jax.tree.leaves(b))))
+
+    kw = dict(epochs=2, batch_size=20, steps_per_epoch=5, lr=0.1)
+    p_plain, _ = local_train(g, images, labels, jnp.int32(100), key, **kw)
+    p_prox, _ = local_train(g, images, labels, jnp.int32(100), key,
+                            prox_mu=10.0, **kw)
+    assert dist(p_prox, g) < dist(p_plain, g)
+
+
+def test_mobility_deterministic_in_t():
+    mob = FreewayMobility(MobilityConfig(n_vehicles=10, seed=4))
+    np.testing.assert_array_equal(mob.positions(12.5), mob.positions(12.5))
+
+
+def test_staleness_experiment_sane():
+    """tau=0 centralized selection is ideal; staleness induces regret;
+    DCS stays low-regret with fresh local state."""
+    from benchmarks.staleness import bench_staleness
+    rows = {r.split(",")[0]: float(r.split(",")[1])
+            for r in bench_staleness()}
+    assert abs(rows["staleness_ccs_regret@tau=0"]) < 1e-6
+    assert rows["staleness_ccs_regret@tau=30"] > 0.02
+    assert rows["staleness_dcs_regret"] < rows["staleness_ccs_regret@tau=30"]

@@ -1,0 +1,74 @@
+"""Fuzzy evaluator tests: Mamdani properties + hypothesis invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fuzzy import FuzzyEvaluator, FuzzyEvaluatorConfig
+from repro.kernels import ref as kref
+
+
+@pytest.fixture(scope="module")
+def ev():
+    return FuzzyEvaluator()
+
+
+def test_output_range(ev):
+    x = jax.random.uniform(jax.random.PRNGKey(0), (257, 4))
+    y = ev.evaluate(x)
+    assert y.shape == (257,)
+    assert float(y.min()) >= 0.0 and float(y.max()) <= 100.0
+    assert not jnp.isnan(y).any()
+
+
+def test_best_beats_worst(ev):
+    x = jnp.array([[1.0, 1.0, 1.0, 1.0],      # all best
+                   [0.0, 0.0, 0.0, 0.0],      # all worst
+                   [0.5, 0.5, 0.5, 0.5]])
+    y = np.asarray(ev.evaluate(x))
+    assert y[0] > y[2] > y[1]
+    assert y[0] > 80.0 and y[1] < 20.0
+
+
+def test_level_of_matches_centers(ev):
+    y = jnp.array([0.0, 12.5, 58.09, 100.0])
+    lv = np.asarray(ev.level_of(y))
+    assert lv[0] == 0 and lv[1] == 1 and lv[3] == 8
+    assert lv[2] in (4, 5)            # the paper's 58.09 example sits here
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.0, 1.0), min_size=4, max_size=4),
+       st.integers(0, 3), st.floats(0.05, 0.3))
+def test_monotone_in_each_variable(x, var, delta):
+    """Improving any single input never lowers the evaluation (within
+    numerical tolerance) — follows from the monotone rule base and
+    shared membership functions."""
+    ev = FuzzyEvaluator()
+    x = np.asarray(x, np.float32)
+    x2 = x.copy()
+    x2[var] = min(1.0, x2[var] + delta)
+    y = np.asarray(ev.evaluate(jnp.stack([jnp.asarray(x), jnp.asarray(x2)])))
+    assert y[1] >= y[0] - 1.5        # tolerance: Gaussian tails overlap
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 97))
+def test_batch_consistency(n):
+    """Evaluating a batch equals evaluating rows independently."""
+    ev = FuzzyEvaluator()
+    x = jax.random.uniform(jax.random.PRNGKey(n), (n, 4))
+    full = np.asarray(ev.evaluate(x))
+    one = np.asarray(ev.evaluate(x[:1]))
+    np.testing.assert_allclose(full[0], one[0], rtol=1e-5)
+
+
+def test_calibration_moves_means():
+    ev = FuzzyEvaluator()
+    hist = np.random.default_rng(0).beta(2, 5, size=(1000, 4))
+    ev.calibrate(hist)
+    assert ev.cfg.means.shape == (4, 3)
+    assert (np.diff(ev.cfg.means, axis=1) > 0).all()   # pct10 < 50 < 90
+    y = ev.evaluate(jnp.asarray(hist[:16], jnp.float32))
+    assert not jnp.isnan(y).any()

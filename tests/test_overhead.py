@@ -1,0 +1,63 @@
+"""Communication-overhead model vs the paper's own published numbers
+(§4.2 / Fig. 2): 22.5 GB at tau=1s, 0.41 GB upload, crossings at ~52 s and
+~15 s — these are *the paper's claims*, so exact-value tests."""
+import numpy as np
+import pytest
+
+from repro.core.overhead import (GBoardParams, IoVParams, accumulated_time_s,
+                                 crossing_interval_s, fig2_curves,
+                                 fig9_curves, model_upload_bytes,
+                                 state_maintenance_bytes)
+
+
+def test_fig2_state_bytes_at_1s():
+    p = GBoardParams()
+    c = state_maintenance_bytes(p.n_participants, p.state_bytes_cfl,
+                                p.round_period_s, 1.0)
+    assert c == pytest.approx(22.5e9, rel=0.05)          # paper: 22.5 GB
+
+
+def test_fig2_upload_bytes():
+    p = GBoardParams()
+    up = model_upload_bytes(p.clients_per_round, p.model_bytes)
+    assert up == pytest.approx(0.42e9, rel=0.03)         # paper: 0.41 GB
+
+
+def test_fig2_crossings():
+    p = GBoardParams()
+    t_cfl = crossing_interval_s(p.n_participants, p.state_bytes_cfl,
+                                p.round_period_s, p.clients_per_round,
+                                p.model_bytes)
+    t_fuz = crossing_interval_s(p.n_participants, p.state_bytes_ccs_fuzzy,
+                                p.round_period_s, p.clients_per_round,
+                                p.model_bytes)
+    # paper: curves cross the upload line at 52 s and 15 s
+    assert t_cfl == pytest.approx(52.0, abs=2.0)
+    assert t_fuz == pytest.approx(15.0, abs=1.5)
+
+
+def test_fig2_monotone_decreasing():
+    iv = np.linspace(1, 100, 50)
+    c = fig2_curves(iv)
+    assert (np.diff(c["cfl_bytes"]) < 0).all()
+    assert (c["cfl_bytes"] > c["ccs_fuzzy_bytes"]).all()
+
+
+def test_fig9_ordering():
+    """DCS < CCS-fuzzy = CCS in accumulated time; all decrease with the
+    interval; all exceed the model-only floor."""
+    iv = np.array([0.5, 1.0, 5.0, 20.0])
+    c = fig9_curves(iv)
+    assert (c["dcs"] < c["ccs"]).all()
+    assert (c["dcs"] < c["ccs-fuzzy"]).all()
+    assert (np.diff(c["dcs"]) < 0).all()
+    assert (c["dcs"] > c["model-only"]).all()
+
+
+def test_fig9_latency_ratio():
+    """With state messages dominating, DCS/CCS time ratio approaches the
+    DSRC/cloud latency ratio 40/200."""
+    p = IoVParams()
+    dcs = accumulated_time_s("dcs", 0.1, p)
+    ccs = accumulated_time_s("ccs", 0.1, p)
+    assert dcs / ccs == pytest.approx(0.2, abs=0.02)

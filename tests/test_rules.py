@@ -1,0 +1,48 @@
+"""Rule-base tests: the paper's published Table 2 rows + structural
+properties of the reconstructed 81-rule table."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.rules import (PAPER_ANCHORS, build_rule_table, consequent,
+                              verify_anchors)
+
+
+def test_table_size_and_range():
+    table, levels = build_rule_table()
+    assert table.shape == (81, 4)
+    assert levels.shape == (81,)
+    assert levels.min() >= 0 and levels.max() <= 8
+    # every antecedent combination appears exactly once
+    assert len({tuple(r) for r in table}) == 81
+
+
+def test_paper_anchor_rows():
+    """All nine published rows of Table 2 match (antecedent + level)."""
+    assert verify_anchors()
+    table, levels = build_rule_table()
+    expected_antecedents = {
+        1: (2, 2, 2, 2), 2: (1, 2, 2, 2), 3: (0, 2, 2, 2),
+        52: (2, 0, 0, 1), 53: (1, 0, 0, 1), 54: (0, 0, 0, 1),
+        79: (2, 0, 0, 0), 80: (1, 0, 0, 0), 81: (0, 0, 0, 0),
+    }
+    for rule_no, ante in expected_antecedents.items():
+        assert tuple(table[rule_no - 1]) == ante, rule_no
+        assert levels[rule_no - 1] == PAPER_ANCHORS[rule_no]
+
+
+def test_monotonicity():
+    """Raising any input level never lowers the consequent."""
+    for combo in itertools.product(range(3), repeat=4):
+        base = consequent(*combo)
+        for j in range(4):
+            if combo[j] < 2:
+                up = list(combo)
+                up[j] += 1
+                assert consequent(*up) >= base, (combo, j)
+
+
+def test_best_and_worst():
+    assert consequent(2, 2, 2, 2) == 8
+    assert consequent(0, 0, 0, 0) == 0

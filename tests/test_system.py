@@ -1,0 +1,72 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The headline reproduction property (paper §6.2): on the non-iid vehicular
+dataset, DCS selects near the centralized budget of clients without any
+server-side state collection, and the fuzzy evaluation of selected clients
+beats the population average (the selection is 'biased' the right way).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fuzzy import FuzzyEvaluator
+from repro.core.selection import dcs_select, ccs_fuzzy_select
+from repro.fl.mobility import FreewayMobility, MobilityConfig
+from repro.fl.partition import PartitionConfig
+from repro.fl.rounds import FLSimConfig, FLSimulation
+
+
+def _sim(scheme, seed=0, rounds=1):
+    return FLSimulation(FLSimConfig(
+        scheme=scheme, n_rounds=rounds, local_epochs=1,
+        samples_per_class=260,
+        partition=PartitionConfig(n_clients=10, big_clients=3,
+                                  big_quantity=120, small_quantity=40,
+                                  classes_per_client=9),
+        mobility=MobilityConfig(n_vehicles=10, seed=seed), seed=seed))
+
+
+def test_dcs_selected_count_tracks_paper():
+    """Paper: DCS averages ~5 selected on the 30-vehicle road with top_m=2
+    per 200 m.  On our 10-vehicle debug road, DCS must select >=1 and <=
+    top_m * ceil(road/range) vehicles each round."""
+    sim = _sim("dcs")
+    pos = sim.mobility.positions(0.0)
+    feats = sim._features(pos)
+    evals = sim.evaluator.evaluate(jnp.asarray(feats))
+    mask = np.asarray(dcs_select(jnp.asarray(pos), evals,
+                                 comm_range=200.0, top_m=2, e_tau=30.0))
+    assert 1 <= mask.sum() <= 2 * int(np.ceil(1000 / 200.0)) + 2
+
+
+def test_dcs_selects_better_than_average():
+    sim = _sim("dcs", seed=1)
+    pos = sim.mobility.positions(0.0)
+    feats = sim._features(pos)
+    evals = np.asarray(sim.evaluator.evaluate(jnp.asarray(feats)))
+    mask = np.asarray(dcs_select(jnp.asarray(pos), jnp.asarray(evals),
+                                 comm_range=200.0, top_m=2, e_tau=30.0))
+    if mask.sum() and mask.sum() < len(evals):
+        assert evals[mask > 0].mean() >= evals.mean() - 1e-6
+
+
+def test_dcs_vs_ccs_fuzzy_selection_overlap():
+    """DCS approximates centralized fuzzy selection (the paper's headline):
+    selected sets overlap substantially under uniform vehicle placement."""
+    sim = _sim("dcs", seed=2)
+    pos = sim.mobility.positions(0.0)
+    feats = sim._features(pos)
+    evals = sim.evaluator.evaluate(jnp.asarray(feats))
+    m_dcs = np.asarray(dcs_select(jnp.asarray(pos), evals,
+                                  comm_range=200.0, top_m=2, e_tau=30.0))
+    m_ccs = np.asarray(ccs_fuzzy_select(evals, int(m_dcs.sum())))
+    inter = ((m_dcs > 0) & (m_ccs > 0)).sum()
+    assert inter >= max(1, int(0.4 * m_dcs.sum()))
+
+
+@pytest.mark.slow
+def test_one_round_improves_over_init():
+    sim = _sim("dcs", seed=3, rounds=2)
+    h = sim.run(2)
+    assert h[-1]["accuracy"] > 0.15        # 10 classes, random = 0.1

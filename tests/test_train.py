@@ -1,0 +1,103 @@
+"""Training substrate: AdamW/schedules, grad-accum equivalence,
+checkpoint round-trip, CNN training sanity."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, scaled_down
+from repro.configs.base import ShapeConfig
+from repro.configs.mnist_cnn import CONFIG as CNN_CFG
+from repro.models import registry as R
+from repro.models.cnn import cnn_loss, count_params, init_cnn
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+from repro.train.optim import (OptConfig, adamw_init, adamw_update,
+                               schedule_lr, sgd_update)
+from repro.train.step import make_train_step
+
+
+def test_cnn_param_count_matches_paper():
+    params = init_cnn(jax.random.PRNGKey(0), CNN_CFG)
+    n = count_params(params)
+    assert abs(n - 1_663_370) < 5_000         # paper: ~1.66M
+
+
+def test_cnn_learns_synthetic():
+    from repro.data.synthetic import make_dataset
+    images, labels = make_dataset(40, seed=0)
+    images, labels = jnp.asarray(images), jnp.asarray(labels)
+    params = init_cnn(jax.random.PRNGKey(1), CNN_CFG)
+    loss0, m0 = cnn_loss(params, images, labels)
+
+    @jax.jit
+    def step(p):
+        (l, m), g = jax.value_and_grad(cnn_loss, has_aux=True)(
+            p, images, labels)
+        return sgd_update(p, g, 0.1), l
+
+    for _ in range(40):
+        params, l = step(params)
+    loss1, m1 = cnn_loss(params, images, labels)
+    assert float(loss1) < float(loss0) * 0.5
+    assert float(m1["acc"]) > 0.7
+
+
+def test_schedules():
+    cfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                    schedule="cosine")
+    lr_w = float(schedule_lr(cfg, jnp.int32(5)))
+    lr_p = float(schedule_lr(cfg, jnp.int32(10)))
+    lr_e = float(schedule_lr(cfg, jnp.int32(100)))
+    assert lr_w < lr_p and lr_e < lr_p
+    assert lr_e == pytest.approx(1e-4, rel=0.05)          # min_lr_frac
+    wsd = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                    schedule="wsd")
+    lr_stable = float(schedule_lr(wsd, jnp.int32(50)))
+    assert lr_stable == pytest.approx(1e-3, rel=1e-5)     # stable plateau
+    lr_decay = float(schedule_lr(wsd, jnp.int32(99)))
+    assert lr_decay < lr_stable
+
+
+def test_adamw_step_moves_params():
+    params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+    grads = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    st = adamw_init(params)
+    p2, st2, m = adamw_update(OptConfig(warmup_steps=0), grads, st, params)
+    assert int(st2["step"]) == 1
+    assert float(m["grad_norm"]) > 0
+    assert not np.allclose(np.asarray(p2["w"]), 1.0)
+
+
+def test_grad_accum_equivalence():
+    """ga=2 over a batch == ga=1 over the same batch (same grads up to
+    numerics), since microbatch losses are averaged."""
+    cfg = scaled_down(get_arch("gemma-2b"))
+    key = jax.random.PRNGKey(0)
+    params = R.init_params(key, cfg)
+    sh1 = ShapeConfig("a", 32, 4, "train", grad_accum=1)
+    sh2 = ShapeConfig("b", 32, 4, "train", grad_accum=2)
+    batch = R.make_concrete_batch(cfg, sh1, key, "train")
+    opt = OptConfig(lr=1e-2, grad_clip=0.0, weight_decay=0.0)
+    s1 = make_train_step(cfg, sh1, opt)
+    s2 = make_train_step(cfg, sh2, opt)
+    p1, _, m1 = s1(params, adamw_init(params), batch)
+    p2, _, m2 = s2(params, adamw_init(params), batch)
+    d = max(float(jnp.abs(a - b).max())
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d < 5e-3, d
+
+
+def test_checkpoint_roundtrip():
+    cfg = scaled_down(get_arch("gemma-2b"))
+    key = jax.random.PRNGKey(0)
+    params = R.init_params(key, cfg)
+    opt = adamw_init(params)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, params, opt, step=7, extra={"arch": cfg.name})
+        p2, o2, step = load_checkpoint(d, params, opt)
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
