@@ -13,6 +13,7 @@ import sys
 import time
 import traceback
 
+from benchmarks.engine_throughput import bench_engine_throughput
 from benchmarks.kernels_bench import (bench_fuzzy_eval, bench_neighbor_elect,
                                       bench_wkv6)
 from benchmarks.paper_figures import (bench_fig2_overhead,
@@ -25,6 +26,7 @@ from benchmarks.staleness import bench_staleness
 from benchmarks.selection_collectives import bench_selection_collectives
 
 BENCHES = {
+    "engine_throughput": bench_engine_throughput,
     "fig2": bench_fig2_overhead,
     "fig6": bench_fig6_accuracy,
     "fig7": bench_fig7_distribution,
@@ -39,13 +41,15 @@ BENCHES = {
 }
 
 
-def main() -> None:
+def main() -> int:
     names = sys.argv[1:] or list(BENCHES)
+    failed = []
     print("name,value,derived")
     for name in names:
         fn = BENCHES.get(name)
         if fn is None:
             print(f"{name},NaN,unknown bench (known: {' '.join(BENCHES)})")
+            failed.append(name)
             continue
         t0 = time.time()
         try:
@@ -56,7 +60,10 @@ def main() -> None:
         except Exception as e:                       # noqa: BLE001
             traceback.print_exc()
             print(f"{name}_error,1,{type(e).__name__}: {e}", flush=True)
+            failed.append(name)
+    # a raising (or unknown) bench must gate CI, not just print
+    return 1 if failed else 0
 
 
 if __name__ == '__main__':
-    main()
+    raise SystemExit(main())

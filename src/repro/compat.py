@@ -1,0 +1,13 @@
+"""Version-compatibility shims for jax API drift.
+
+Keep every try/except-import of a moved jax symbol here so call sites
+stay clean and the fallbacks can't drift apart.
+"""
+from __future__ import annotations
+
+try:                                     # jax >= 0.5
+    from jax import shard_map
+except ImportError:                      # jax 0.4.x
+    from jax.experimental.shard_map import shard_map
+
+__all__ = ["shard_map"]

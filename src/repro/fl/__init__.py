@@ -1,16 +1,21 @@
 from repro.fl.aggregation import fedavg, fedavg_masked, global_loss
-from repro.fl.client import dataset_loss, evaluate_accuracy, local_train
+from repro.fl.client import (dataset_loss, dataset_loss_batch,
+                             dataset_loss_packed, evaluate_accuracy,
+                             local_train, local_train_batch)
 from repro.fl.mobility import FreewayMobility, MobilityConfig
 from repro.fl.network import CellularNetwork, NetworkConfig
-from repro.fl.partition import PartitionConfig, pad_clients, partition
+from repro.fl.partition import (PartitionConfig, pad_clients, partition,
+                                stack_clients)
 from repro.fl.rounds import FLSimConfig, FLSimulation
 from repro.fl.timing import TimingConfig, completes_before_deadline, \
     training_time_s
 
 __all__ = [
     "fedavg", "fedavg_masked", "global_loss", "dataset_loss",
-    "evaluate_accuracy", "local_train", "FreewayMobility", "MobilityConfig",
+    "dataset_loss_batch", "dataset_loss_packed", "evaluate_accuracy",
+    "local_train",
+    "local_train_batch", "FreewayMobility", "MobilityConfig",
     "CellularNetwork", "NetworkConfig", "PartitionConfig", "pad_clients",
-    "partition", "FLSimConfig", "FLSimulation", "TimingConfig",
-    "completes_before_deadline", "training_time_s",
+    "partition", "stack_clients", "FLSimConfig", "FLSimulation",
+    "TimingConfig", "completes_before_deadline", "training_time_s",
 ]

@@ -1,13 +1,40 @@
 """Participant-side logic: Eq. 7 loss probe + Eq. 1 local SGD training.
 
 The local trainer is one jitted function over fixed-capacity padded
-arrays (invalid samples masked out of the loss), scanning
-epochs x batches — the whole local round is a single XLA program.
+arrays (invalid samples masked out of the loss) — the whole local round
+is a single XLA program.
+
+Three call shapes are exposed:
+
+- per-client (``dataset_loss`` / ``local_train``), the reference path the
+  loop engine uses;
+- batched over a leading client axis (``dataset_loss_batch`` /
+  ``local_train_batch``) — one compile and one dispatch for a whole
+  cohort instead of ``O(n_clients)``;
+- packed (``dataset_loss_packed``): the Eq. 7 probe over a flat
+  concatenation of every client's *valid* probe samples, so no FLOPs are
+  spent convolving padding rows.  The batched round engine precomputes
+  the packing once (client membership is static across rounds).
+
+XLA:CPU notes (measured on the 2-core dev box, jax 0.4.37):
+
+- ``lax.scan``/``while`` loop bodies execute on a slow path (~5-10x:
+  conv gradients drop from ~50 to ~5 GFLOPS).  All chunk/step loops here
+  fully unroll when the trip count is <= ``_UNROLL_LIMIT`` and fall back
+  to ``lax.scan`` for Table-3-scale epoch counts where unrolling would
+  blow up compile time.
+- the epoch shuffle is a one-hot permutation matmul rather than a row
+  gather: a batched gather of image rows hits a scalar gather path; the
+  matmul form is a GEMM and bitwise-equal (each output row is 1*x plus
+  exact zeros).
+- ``local_train_batch`` scans steps OUTSIDE and vmaps clients INSIDE;
+  ``vmap(scan(...))`` fuses into one while loop and hits the same slow
+  path as above.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,12 +46,46 @@ from repro.train.optim import sgd_update
 
 Params = Any
 
+# loops up to this many iterations are unrolled into straight-line XLA
+# (past it, compile time beats the while-loop slow path)
+_UNROLL_LIMIT = 64
 
-@functools.partial(jax.jit, static_argnames=("batch",))
-def dataset_loss(params: Params, images: jax.Array, labels: jax.Array,
-                 n_valid: jax.Array, batch: int = 512) -> jax.Array:
-    """Eq. 7: mean per-sample loss of the *global* model over the local
-    dataset, no gradient update.  images: (cap, 28,28,1)."""
+# epoch-shuffle form: the one-hot matmul is O(cap^2) — a clear win over
+# the scalar gather path at small caps, a memory/FLOP blowup at the
+# Table-3 full profile (cap ~4500, where a (C, cap, cap) one-hot is GBs)
+_SHUFFLE_MATMUL_CAP = 512
+
+
+def _shuffle_rows(flat: jax.Array, perm: jax.Array,
+                  cap: int) -> jax.Array:
+    """flat: (..., cap, D) reordered to flat[..., perm, :] — one-hot
+    matmul below _SHUFFLE_MATMUL_CAP (bitwise-equal: each output row is
+    1*x plus exact zeros), plain gather above it."""
+    if cap <= _SHUFFLE_MATMUL_CAP:
+        onehot = (perm[..., :, None] == jnp.arange(cap)).astype(flat.dtype)
+        return onehot @ flat
+    return jnp.take_along_axis(flat, perm[..., :, None], axis=-2)
+
+
+def _chunk_reduce(body, init, n: int):
+    """acc = body(acc, i) for i in range(n) — unrolled when small."""
+    if n <= _UNROLL_LIMIT:
+        acc = init
+        for i in range(n):
+            acc = body(acc, jnp.int32(i))
+        return acc
+    return jax.lax.scan(lambda a, i: (body(a, i), None), init,
+                        jnp.arange(n))[0]
+
+
+# --------------------------------------------------------------------------
+# Eq. 7 probe
+# --------------------------------------------------------------------------
+
+def _dataset_loss(params: Params, images: jax.Array, labels: jax.Array,
+                  n_valid: jax.Array, batch: int) -> jax.Array:
+    """Eq. 7 body: mean per-sample loss of the *global* model over the
+    local dataset, no gradient update.  images: (cap, 28,28,1)."""
     cap = images.shape[0]
     pad = (-cap) % batch
     if pad:
@@ -38,10 +99,134 @@ def dataset_loss(params: Params, images: jax.Array, labels: jax.Array,
         losses = cnn_sample_losses(params, im, lb)
         idx = i * batch + jnp.arange(batch)
         m = (idx < n_valid).astype(jnp.float32)
-        return acc + (losses * m).sum(), None
+        return acc + (losses * m).sum()
 
-    tot, _ = jax.lax.scan(body, jnp.float32(0.0), jnp.arange(nb))
+    tot = _chunk_reduce(body, jnp.float32(0.0), nb)
     return tot / jnp.maximum(n_valid.astype(jnp.float32), 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("batch",))
+def dataset_loss(params: Params, images: jax.Array, labels: jax.Array,
+                 n_valid: jax.Array, batch: int = 512) -> jax.Array:
+    """Per-client Eq. 7 probe.  images: (cap, 28,28,1) -> scalar."""
+    return _dataset_loss(params, images, labels, n_valid, batch)
+
+
+@functools.partial(jax.jit, static_argnames=("n_clients", "batch"))
+def dataset_loss_packed(params: Params, images: jax.Array, labels: jax.Array,
+                        seg: jax.Array, counts: jax.Array, n_clients: int,
+                        batch: int = 512) -> jax.Array:
+    """Eq. 7 for a whole cohort in one fused forward pass over packed
+    samples.
+
+    images: (S, 28,28,1) — every client's valid probe samples
+    concatenated; seg: (S,) client id per sample, ``n_clients`` for
+    padding rows; counts: (C,) samples per client.  Returns (C,)
+    per-client mean losses."""
+    pad = (-images.shape[0]) % batch
+    if pad:
+        images = jnp.pad(images, ((0, pad),) + ((0, 0),) * (
+            images.ndim - 1))
+        labels = jnp.pad(labels, (0, pad))
+        seg = jnp.pad(seg, (0, pad), constant_values=n_clients)
+    nb = images.shape[0] // batch
+
+    def body(acc, i):
+        im = jax.lax.dynamic_slice_in_dim(images, i * batch, batch)
+        lb = jax.lax.dynamic_slice_in_dim(labels, i * batch, batch)
+        sg = jax.lax.dynamic_slice_in_dim(seg, i * batch, batch)
+        losses = cnn_sample_losses(params, im, lb)
+        # per-client reduction as a one-hot matvec — a scatter-based
+        # segment_sum here runs on XLA:CPU's scalar path
+        onehot = (sg[:, None] == jnp.arange(n_clients + 1)[None, :]
+                  ).astype(jnp.float32)
+        return acc + losses @ onehot
+
+    tot = _chunk_reduce(body, jnp.zeros(n_clients + 1, jnp.float32), nb)
+    return tot[:n_clients] / jnp.maximum(counts.astype(jnp.float32), 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("batch",))
+def dataset_loss_batch(params: Params, images: jax.Array, labels: jax.Array,
+                       n_valid: jax.Array, batch: int = 512) -> jax.Array:
+    """Eq. 7 probe over a stacked (C, cap, ...) cohort in one fused pass.
+
+    Flattens the client axis into the sample axis (shared global params,
+    so the whole cohort is one big forward batch) and reduces per client.
+    Returns (C,) mean losses."""
+    c, cap = images.shape[0], images.shape[1]
+    flat_im = images.reshape((c * cap,) + images.shape[2:])
+    flat_lb = labels.reshape(c * cap)
+    seg = jnp.repeat(jnp.arange(c), cap)
+    # mask padding rows into the overflow segment
+    valid = jnp.arange(c * cap) % cap < n_valid[seg]
+    seg = jnp.where(valid, seg, c)
+    return dataset_loss_packed(params, flat_im, flat_lb, seg, n_valid,
+                               n_clients=c, batch=batch)
+
+
+# --------------------------------------------------------------------------
+# Eq. 1 local SGD
+# --------------------------------------------------------------------------
+
+def _sample_nll(logits: jax.Array, labels: jax.Array,
+                mask: jax.Array) -> jax.Array:
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def _local_train(params: Params, images: jax.Array, labels: jax.Array,
+                 n_valid: jax.Array, key: jax.Array, epochs: int,
+                 batch_size: int, steps_per_epoch: int, lr: float,
+                 prox_mu: float) -> Tuple[Params, jax.Array]:
+    """Eq. 1 local update body.  Returns (params, mean last-epoch loss)."""
+    cap = images.shape[0]
+    global_params = params
+    flat = images.reshape(cap, -1)
+    unroll = epochs * steps_per_epoch <= _UNROLL_LIMIT
+
+    def loss_fn(p, im, lb, m):
+        return _sample_nll(cnn_forward(p, im), lb, m)
+
+    def epoch(carry, ekey):
+        p, _ = carry
+        perm = jax.random.permutation(ekey, cap)
+        ep_images = _shuffle_rows(flat, perm, cap).reshape(images.shape)
+        ep_labels = labels[perm]
+        ep_mask = (perm < n_valid).astype(jnp.float32)
+
+        def bstep(p, i):
+            im = jax.lax.dynamic_slice_in_dim(ep_images, i * batch_size,
+                                              batch_size)
+            lb = jax.lax.dynamic_slice_in_dim(ep_labels, i * batch_size,
+                                              batch_size)
+            m = jax.lax.dynamic_slice_in_dim(ep_mask, i * batch_size,
+                                             batch_size)
+            loss, grads = jax.value_and_grad(loss_fn)(p, im, lb, m)
+            if prox_mu > 0.0:
+                pg = prox_grad(p, global_params, prox_mu)
+                grads = jax.tree.map(lambda a, b: a + b, grads, pg)
+            return sgd_update(p, grads, lr), loss
+
+        if unroll:
+            losses: List[jax.Array] = []
+            for i in range(steps_per_epoch):
+                p, loss = bstep(p, jnp.int32(i))
+                losses.append(loss)
+            return (p, jnp.stack(losses).mean()), None
+        p, losses = jax.lax.scan(bstep, p, jnp.arange(steps_per_epoch))
+        return (p, losses.mean()), None
+
+    keys = jax.random.split(key, epochs)
+    carry = (params, jnp.float32(0.0))
+    if unroll:
+        for e in range(epochs):
+            carry, _ = epoch(carry, keys[e])
+    else:
+        carry, _ = jax.lax.scan(epoch, carry, keys)
+    return carry
 
 
 @functools.partial(jax.jit, static_argnames=("epochs", "batch_size",
@@ -51,41 +236,86 @@ def local_train(params: Params, images: jax.Array, labels: jax.Array,
                 n_valid: jax.Array, key: jax.Array, *, epochs: int,
                 batch_size: int, steps_per_epoch: int, lr: float = 0.05,
                 prox_mu: float = 0.0) -> Tuple[Params, jax.Array]:
-    """Eq. 1 local update loop.  Returns (params, mean last-epoch loss)."""
-    cap = images.shape[0]
-    global_params = params
+    """Per-client Eq. 1 local update loop."""
+    return _local_train(params, images, labels, n_valid, key, epochs,
+                        batch_size, steps_per_epoch, lr, prox_mu)
+
+
+@functools.partial(jax.jit, static_argnames=("epochs", "batch_size",
+                                             "steps_per_epoch", "lr",
+                                             "prox_mu"))
+def local_train_batch(params: Params, images: jax.Array, labels: jax.Array,
+                      n_valid: jax.Array, keys: jax.Array, *, epochs: int,
+                      batch_size: int, steps_per_epoch: int, lr: float = 0.05,
+                      prox_mu: float = 0.0) -> Tuple[Params, jax.Array]:
+    """Eq. 1 local SGD for a whole cohort in one fused call.
+
+    images: (C, cap, 28,28,1), labels: (C, cap), n_valid: (C,), keys:
+    (C,)-leading PRNG keys.  Returns (stacked params with a leading client
+    axis, (C,) mean last-epoch losses).  Every client starts from the same
+    broadcast global ``params``; which rows enter the aggregate is the
+    caller's concern (masked FedAvg weights).
+
+    Per-client math is identical to ``local_train`` (same key schedule,
+    same permutations, same batches), but the step loop is OUTER and the
+    client axis is vmapped INSIDE each step (see module docstring)."""
+    c, cap = images.shape[0], images.shape[1]
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (c,) + x.shape), params)
+    global_stacked = stacked
+    flat = images.reshape(c, cap, -1)
+    unroll = epochs * steps_per_epoch <= _UNROLL_LIMIT
 
     def loss_fn(p, im, lb, m):
-        logits = cnn_forward(p, im)
-        logz = jax.nn.logsumexp(logits, axis=-1)
-        gold = jnp.take_along_axis(logits, lb[:, None], axis=-1)[:, 0]
-        nll = (logz - gold) * m
-        return nll.sum() / jnp.maximum(m.sum(), 1.0)
+        return _sample_nll(cnn_forward(p, im), lb, m)
 
-    def epoch(carry, ekey):
+    vgrad = jax.vmap(jax.value_and_grad(loss_fn))
+
+    def epoch(carry, ekeys):
         p, _ = carry
-        perm = jax.random.permutation(ekey, cap)
+        perms = jax.vmap(lambda k: jax.random.permutation(k, cap))(ekeys)
+        ep_images = _shuffle_rows(flat, perms, cap).reshape(images.shape)
+        ep_labels = jnp.take_along_axis(labels, perms, axis=1)
+        ep_mask = (perms < n_valid[:, None]).astype(jnp.float32)
 
         def bstep(p, i):
-            idx = jax.lax.dynamic_slice_in_dim(perm, i * batch_size,
-                                               batch_size)
-            im = images[idx]
-            lb = labels[idx]
-            m = (idx < n_valid).astype(jnp.float32)
-            loss, grads = jax.value_and_grad(loss_fn)(p, im, lb, m)
+            im = jax.lax.dynamic_slice_in_dim(ep_images, i * batch_size,
+                                              batch_size, axis=1)
+            lb = jax.lax.dynamic_slice_in_dim(ep_labels, i * batch_size,
+                                              batch_size, axis=1)
+            m = jax.lax.dynamic_slice_in_dim(ep_mask, i * batch_size,
+                                             batch_size, axis=1)
+            loss, grads = vgrad(p, im, lb, m)
             if prox_mu > 0.0:
-                pg = prox_grad(p, global_params, prox_mu)
-                grads = jax.tree.map(lambda a, b: a + b, grads, pg)
+                pg = prox_grad(p, global_stacked, prox_mu)  # leafwise, so
+                grads = jax.tree.map(lambda a, b: a + b,    # stacked trees
+                                     grads, pg)             # work unchanged
             return sgd_update(p, grads, lr), loss
 
+        if unroll:
+            losses: List[jax.Array] = []
+            for i in range(steps_per_epoch):
+                p, loss = bstep(p, jnp.int32(i))
+                losses.append(loss)
+            return (p, jnp.stack(losses).mean(axis=0)), None
         p, losses = jax.lax.scan(bstep, p, jnp.arange(steps_per_epoch))
-        return (p, losses.mean()), None
+        return (p, losses.mean(axis=0)), None
 
-    keys = jax.random.split(key, epochs)
-    (params, last_loss), _ = jax.lax.scan(epoch, (params, jnp.float32(0.0)),
-                                          keys)
-    return params, last_loss
+    # per-client epoch keys, split exactly as local_train splits them
+    ekeys = jnp.swapaxes(
+        jax.vmap(lambda k: jax.random.split(k, epochs))(keys), 0, 1)
+    carry = (stacked, jnp.zeros((c,), jnp.float32))
+    if unroll:
+        for e in range(epochs):
+            carry, _ = epoch(carry, ekeys[e])
+    else:
+        carry, _ = jax.lax.scan(epoch, carry, ekeys)
+    return carry
 
+
+# --------------------------------------------------------------------------
+# evaluation
+# --------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("batch",))
 def _count_correct(params: Params, images: jax.Array, labels: jax.Array,
@@ -96,11 +326,9 @@ def _count_correct(params: Params, images: jax.Array, labels: jax.Array,
         im = jax.lax.dynamic_slice_in_dim(images, i * batch, batch)
         lb = jax.lax.dynamic_slice_in_dim(labels, i * batch, batch)
         pred = jnp.argmax(cnn_forward(params, im), -1)
-        ok = ((pred == lb) & (lb >= 0)).sum()
-        return acc + ok, None
+        return acc + ((pred == lb) & (lb >= 0)).sum()
 
-    tot, _ = jax.lax.scan(body, jnp.int32(0), jnp.arange(nb))
-    return tot
+    return _chunk_reduce(body, jnp.int32(0), nb)
 
 
 def evaluate_accuracy(params: Params, images: jax.Array,

@@ -15,10 +15,26 @@ the fuzzy evaluator and one of the three selection schemes.  Each round:
      discarded (stragglers);
   7. aggregate: FedAvg (Eq. 2) over the survivors;
   8. account: state-maintenance vs evaluation-exchange communication.
+
+Two engines implement steps 2/5/7 over the same stacked
+``(n_clients, cap, ...)`` dataset tensors:
+
+- ``engine="batched"`` (default): the Eq. 7 probe is one fused forward
+  pass over a packed concatenation of every client's valid probe samples
+  (padding rows cost nothing), local SGD is one ``vmap(local_train)``
+  over the selected cohort (gathered into a bucketed fixed-size tensor so
+  jit sees a handful of shapes), and the selection/deadline mask is
+  folded into the FedAvg weights — stragglers and cohort padding rows
+  contribute zero weight instead of being skipped in Python.  One
+  compile + a constant number of dispatches per round.
+- ``engine="loop"``: the reference per-client Python loop, kept for
+  parity testing (see tests/test_engine_parity.py).
+
+Both engines draw per-client training randomness from the same
+``fold_in(round, client)`` schedule, so they are numerically equivalent.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -31,19 +47,24 @@ from repro.core.fuzzy import FuzzyEvaluator, FuzzyEvaluatorConfig
 from repro.core.selection import (ccs_fuzzy_select, ccs_random_select,
                                   dcs_select)
 from repro.data.synthetic import make_dataset, train_test_split
-from repro.fl.aggregation import fedavg
-from repro.fl.client import dataset_loss, evaluate_accuracy, local_train
+from repro.fl.aggregation import fedavg, fedavg_masked
+from repro.fl.client import (dataset_loss, dataset_loss_packed,
+                             evaluate_accuracy, local_train,
+                             local_train_batch)
 from repro.fl.mobility import FreewayMobility, MobilityConfig
 from repro.fl.network import CellularNetwork, NetworkConfig
-from repro.fl.partition import PartitionConfig, pad_clients, partition
+from repro.fl.partition import PartitionConfig, partition, stack_clients
 from repro.fl.timing import TimingConfig, completes_before_deadline, \
     training_time_s
 from repro.models.cnn import init_cnn
+
+ENGINES = ("batched", "loop")
 
 
 @dataclass
 class FLSimConfig:
     scheme: str = "dcs"                  # dcs | ccs-fuzzy | random
+    engine: str = "batched"              # batched (vmapped) | loop (ref)
     n_rounds: int = 20
     n_clients_central: int = 5           # CCS/random pick (Table 3)
     comm_range_m: float = 200.0
@@ -72,6 +93,9 @@ class FLSimConfig:
 class FLSimulation:
     def __init__(self, cfg: FLSimConfig,
                  evaluator: Optional[FuzzyEvaluator] = None):
+        if cfg.engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}: "
+                             f"{cfg.engine!r}")
         self.cfg = cfg
         rng = np.random.default_rng(cfg.seed)
         images, labels = make_dataset(cfg.samples_per_class, seed=cfg.seed)
@@ -82,24 +106,21 @@ class FLSimulation:
 
         parts = partition(tr_i, tr_l, cfg.partition)
         self.n = cfg.partition.n_clients
-        # two capacity groups keep the jitted local trainer cheap for the
-        # 45-sample vehicles
-        big_cap = int(np.ceil(cfg.partition.big_quantity
-                              / cfg.batch_size) * cfg.batch_size)
-        small_cap = int(np.ceil(max(cfg.partition.small_quantity, cfg.batch_size)
-                                / cfg.batch_size) * cfg.batch_size)
-        self.caps = np.array([big_cap if len(p[1]) > small_cap else small_cap
-                              for p in parts])
-        self.images, self.labels, self.n_valid = {}, {}, np.zeros(
-            self.n, np.int32)
-        padded = {}
-        for cap in sorted(set(self.caps)):
-            group = [i for i in range(self.n) if self.caps[i] == cap]
-            im, lb, nv = pad_clients([parts[i] for i in group], cap)
-            for j, i in enumerate(group):
-                self.images[i] = jnp.asarray(im[j])
-                self.labels[i] = jnp.asarray(lb[j])
-                self.n_valid[i] = nv[j]
+        im, lb, nv = stack_clients(parts, batch_size=cfg.batch_size)
+        self.cap = im.shape[1]
+        self.steps_per_epoch = self.cap // cfg.batch_size
+        self.n_valid = nv                    # (C,) int32, host side
+        # each engine keeps only the copy it reads, the dataset is the
+        # memory bill: host arrays back the batched engine's cohort
+        # gather + probe packing, device arrays feed the loop engine
+        if cfg.engine == "batched":
+            self._np_images, self._np_labels = im, lb
+            self.images = self.labels = None
+            self._build_packed_probe()
+        else:
+            self._np_images = self._np_labels = None
+            self.images = jnp.asarray(im)    # (C, cap, 28, 28, 1)
+            self.labels = jnp.asarray(lb)    # (C, cap)
 
         self.slowdown = rng.uniform(*cfg.slowdown_range, self.n)
         self.network = CellularNetwork(cfg.network)
@@ -111,9 +132,45 @@ class FLSimulation:
         self.evaluator = evaluator or FuzzyEvaluator(
             FuzzyEvaluatorConfig(e_tau=cfg.e_tau))
         self.params = init_cnn(jax.random.PRNGKey(cfg.seed), CNN_CFG)
-        self.key = jax.random.PRNGKey(cfg.seed + 1)
+        self.key = jax.random.PRNGKey(cfg.seed + 1)       # selection draws
+        self.train_key = jax.random.PRNGKey(cfg.seed + 2)  # fold_in schedule
+        self.last_mask: Optional[np.ndarray] = None        # set per round
 
     # ------------------------------------------------------------------
+    _PROBE_BATCH = 128
+
+    def _build_packed_probe(self) -> None:
+        """Pack every client's valid probe samples into one flat tensor.
+
+        Client membership is static across rounds (the partition never
+        changes), so the packing is computed once; each round's probe is
+        then a single fused forward pass with zero padding-row FLOPs."""
+        probe = min(self.cfg.probe_samples, self.cap)
+        take = np.minimum(self.n_valid, probe).astype(np.int64)
+        seg = np.repeat(np.arange(self.n), take)
+        row = np.concatenate([np.arange(t) for t in take])
+        flat_im = self._np_images[seg, row]
+        flat_lb = self._np_labels[seg, row]
+        pad = (-len(seg)) % self._PROBE_BATCH
+        if pad:
+            flat_im = np.concatenate(
+                [flat_im, np.zeros((pad,) + flat_im.shape[1:],
+                                   flat_im.dtype)])
+            flat_lb = np.concatenate([flat_lb,
+                                      np.zeros(pad, flat_lb.dtype)])
+            seg = np.concatenate([seg, np.full(pad, self.n)])
+        self._probe_images = jnp.asarray(flat_im)
+        self._probe_labels = jnp.asarray(flat_lb)
+        self._probe_seg = jnp.asarray(seg.astype(np.int32))
+        self._probe_counts = jnp.asarray(take.astype(np.int32))
+
+    def _round_keys(self, rnd: int) -> jax.Array:
+        """Per-(round, client) PRNG keys — engine-independent, so the loop
+        and batched engines train every client with identical randomness."""
+        rk = jax.random.fold_in(self.train_key, rnd)
+        return jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+            rk, jnp.arange(self.n))
+
     def _features(self, pos: np.ndarray) -> np.ndarray:
         cfg = self.cfg
         sq = self.n_valid / max(self.n_valid.max(), 1)
@@ -121,12 +178,19 @@ class FLSimulation:
         ta = ta_raw / max(ta_raw.max(), 1e-9)
         cc_raw = 1.0 / self.slowdown
         cc = cc_raw / cc_raw.max()
-        probe = self.cfg.probe_samples
-        lf_raw = np.array([
-            float(dataset_loss(
-                self.params, self.images[i][:probe], self.labels[i][:probe],
-                jnp.int32(min(int(self.n_valid[i]), probe)), batch=128))
-            for i in range(self.n)])
+        probe = min(cfg.probe_samples, self.cap)
+        if cfg.engine == "batched":
+            lf_raw = np.asarray(dataset_loss_packed(
+                self.params, self._probe_images, self._probe_labels,
+                self._probe_seg, self._probe_counts, n_clients=self.n,
+                batch=self._PROBE_BATCH))
+        else:
+            lf_raw = np.array([
+                float(dataset_loss(
+                    self.params, self.images[i, :probe],
+                    self.labels[i, :probe],
+                    jnp.int32(min(int(self.n_valid[i]), probe)), batch=128))
+                for i in range(self.n)])
         lf = lf_raw / max(lf_raw.max(), 1e-9)
         return np.stack([sq, ta, cc, lf], axis=1).astype(np.float32)
 
@@ -162,6 +226,80 @@ class FLSimulation:
         return {"state_bytes": state_b, "upload_bytes": up_bytes,
                 "state_time_s": state_t}
 
+    # -- local training + aggregation (steps 5-7) ----------------------
+    def _train_loop(self, survivors: np.ndarray,
+                    keys: jax.Array) -> None:
+        """Reference path: per-client jitted local_train calls + list
+        FedAvg over the survivors."""
+        cfg = self.cfg
+        new_models, weights = [], []
+        for i in np.where(survivors)[0]:
+            p_i, _ = local_train(
+                self.params, self.images[i], self.labels[i],
+                jnp.int32(self.n_valid[i]), keys[i], epochs=cfg.local_epochs,
+                batch_size=cfg.batch_size,
+                steps_per_epoch=self.steps_per_epoch, lr=cfg.lr,
+                prox_mu=cfg.prox_mu)
+            new_models.append(p_i)
+            weights.append(float(self.n_valid[i]))
+        if new_models:                           # Eq. 2
+            self.params = fedavg(new_models, weights)
+
+    @staticmethod
+    def _bucket(k: int) -> int:
+        """Cohort tensor size for k survivors: next multiple of 2, min 4 —
+        jit compiles a handful of shapes no matter how the per-round
+        selection count fluctuates."""
+        return max(4, k + (k % 2))
+
+    def warmup(self, buckets=None) -> None:
+        """Pre-compile the batched trainer for the given cohort bucket
+        sizes (the jit cache persists across rounds).  The default covers
+        small cohorts plus the central-selection budget; a cohort that
+        lands in an uncovered bucket still works — it just compiles on
+        first use.  No-op for the loop engine."""
+        if self.cfg.engine != "batched":
+            return
+        cfg = self.cfg
+        if buckets is None:
+            buckets = sorted({4, 6, 8,
+                              self._bucket(min(cfg.n_clients_central,
+                                               self.n))})
+        keys = self._round_keys(0)
+        for b in buckets:
+            idx = np.zeros(b, np.int64)
+            local_train_batch(
+                self.params, jnp.asarray(self._np_images[idx]),
+                jnp.asarray(self._np_labels[idx]),
+                jnp.asarray(self.n_valid[idx]), keys[jnp.asarray(idx)],
+                epochs=cfg.local_epochs, batch_size=cfg.batch_size,
+                steps_per_epoch=self.steps_per_epoch, lr=cfg.lr,
+                prox_mu=cfg.prox_mu)
+
+    def _train_batched(self, survivors: np.ndarray,
+                       keys: jax.Array) -> None:
+        """One vmap(local_train) over the surviving cohort; the mask
+        enters Eq. 2 only through the FedAvg weights — cohort padding
+        rows train like everyone else and aggregate at weight zero.
+        Stragglers are dropped at the gather (their update is discarded
+        either way; at IoV scale their local SGD FLOPs are not)."""
+        cfg = self.cfg
+        if not survivors.any():
+            return
+        cohort = np.where(survivors)[0]
+        k = len(cohort)
+        bucket = self._bucket(k)
+        idx = np.concatenate([cohort, np.full(bucket - k, cohort[0])])
+        stacked, _ = local_train_batch(
+            self.params, jnp.asarray(self._np_images[idx]),
+            jnp.asarray(self._np_labels[idx]), jnp.asarray(self.n_valid[idx]),
+            keys[jnp.asarray(idx)], epochs=cfg.local_epochs,
+            batch_size=cfg.batch_size, steps_per_epoch=self.steps_per_epoch,
+            lr=cfg.lr, prox_mu=cfg.prox_mu)
+        w = (self.n_valid * survivors)[idx].astype(np.float32)
+        w[k:] = 0.0                          # padding duplicates drop out
+        self.params = fedavg_masked(stacked, jnp.asarray(w))  # Eq. 2
+
     # ------------------------------------------------------------------
     def run_round(self, rnd: int) -> Dict[str, float]:
         cfg = self.cfg
@@ -170,41 +308,31 @@ class FLSimulation:
         feats = self._features(pos)
         evals = self.evaluator.evaluate(jnp.asarray(feats))
         mask = self._select(pos, evals)
+        self.last_mask = mask
         sel = np.where(mask > 0)[0]
 
-        # local training (Eq. 1)
-        new_models, weights = [], []
-        train_t = training_time_s(
-            TimingConfig(cfg.local_epochs, cfg.batch_size,
-                         deadline_s=cfg.deadline_s),
-            self.slowdown, self.n_valid)
+        # deadline filter (Eq. 6)
+        tcfg = TimingConfig(cfg.local_epochs, cfg.batch_size,
+                            deadline_s=cfg.deadline_s)
+        train_t = training_time_s(tcfg, self.slowdown, self.n_valid)
         upload_t = self.network.upload_time_s(pos, cfg.model_bytes)
-        ok = completes_before_deadline(
-            TimingConfig(cfg.local_epochs, cfg.batch_size,
-                         deadline_s=cfg.deadline_s), train_t, upload_t)
-        n_straggler = 0
-        for i in sel:
-            if not ok[i]:
-                n_straggler += 1
-                continue
-            self.key, sub = jax.random.split(self.key)
-            cap = int(self.caps[i])
-            p_i, _ = local_train(
-                self.params, self.images[i], self.labels[i],
-                jnp.int32(self.n_valid[i]), sub, epochs=cfg.local_epochs,
-                batch_size=cfg.batch_size,
-                steps_per_epoch=cap // cfg.batch_size, lr=cfg.lr,
-                prox_mu=cfg.prox_mu)
-            new_models.append(p_i)
-            weights.append(float(self.n_valid[i]))
+        ok = completes_before_deadline(tcfg, train_t, upload_t)
+        selected = mask > 0
+        survivors = selected & ok
+        n_straggler = int((selected & ~ok).sum())
 
-        if new_models:                           # Eq. 2
-            self.params = fedavg(new_models, weights)
+        # local training (Eq. 1) + aggregation (Eq. 2)
+        keys = self._round_keys(rnd)
+        if cfg.engine == "batched":
+            self._train_batched(survivors, keys)
+        else:
+            self._train_loop(survivors, keys)
 
         acc = evaluate_accuracy(self.params, self.test_images,
-                                self.test_labels)
+                                self.test_labels, batch=256)
         row = {"round": rnd, "accuracy": acc, "n_selected": len(sel),
-               "n_aggregated": len(new_models), "n_straggler": n_straggler,
+               "n_aggregated": int(survivors.sum()),
+               "n_straggler": n_straggler,
                "mean_eval_selected": float(
                    evals[sel].mean()) if len(sel) else 0.0}
         row.update(self._comm_accounting(len(sel)))

@@ -10,6 +10,77 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+# ---------------------------------------------------------------------------
+# hypothesis fallback (offline containers).
+#
+# CI installs the real hypothesis via `pip install -e .[test]`; some dev
+# containers cannot reach an index, so property tests would fail at
+# collection.  This shim provides the small subset of the API the suite
+# uses — deterministic pseudo-random examples, no shrinking — and is only
+# installed when the real package is absent.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import random
+    import sys
+    import types
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(lo, hi):
+        return _Strategy(lambda r: r.randint(lo, hi))
+
+    def _floats(lo, hi):
+        return _Strategy(lambda r: r.uniform(lo, hi))
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda r: r.choice(seq))
+
+    def _lists(elem, min_size=0, max_size=10):
+        return _Strategy(
+            lambda r: [elem.draw(r)
+                       for _ in range(r.randint(min_size, max_size))])
+
+    def _settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+        return deco
+
+    def _given(*strats, **kwstrats):
+        def deco(fn):
+            # zero-arg wrapper: the example args must not look like
+            # pytest fixtures (the real hypothesis does the same)
+            def wrapper():
+                n = getattr(wrapper, "_fallback_max_examples", 20)
+                for ex in range(n):
+                    r = random.Random(0xC0FFEE + ex)
+                    vals = [s.draw(r) for s in strats]
+                    kvals = {k: s.draw(r) for k, s in kwstrats.items()}
+                    fn(*vals, **kvals)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    _hyp = types.ModuleType("hypothesis")
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.sampled_from = _sampled_from
+    _st.lists = _lists
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.__fallback__ = True
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)
