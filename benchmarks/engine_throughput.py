@@ -1,23 +1,35 @@
-"""Round-engine throughput: batched vmapped engine vs per-client loop.
+"""Round-engine throughput: grouped vmapped engine vs the single-stack
+batched engine vs the per-client loop.
 
-ISSUE 1 acceptance: the batched engine must be >= 2x faster per round
-than the reference loop engine at >= 20 clients on CPU.  The profile is
-the motivating regime — a Table-3-shaped fleet scaled to ~100 vehicles
-(12 data-rich, the rest data-poor) where the per-round Eq. 7 probe of
-every participant dominates.  Both engines get two warm-up rounds (jit
-compile excluded — steady state is what Table-3-scale sweeps pay for),
-then are timed over ``TIMED_ROUNDS``.
+Two claims are measured:
 
-Fairness note: both engines run the SAME semantics over the same
-uniform-capacity stacked tensors (required for parity), including the
-PR-1 XLA:CPU fixes (reshape pool, loop unrolling, matmul shuffle) — the
-loop baseline here is the optimized reference, not the seed.  Uniform
-capacity does cost the loop's few small-client survivors some masked
-steps the seed's two-cap grouping avoided (~1-2s of its ~21s round);
-per-capacity cohort groups are an open ROADMAP item.
+- ISSUE 1 (updated): the batched engine is faster per round than the
+  reference loop engine at >= 20 clients on CPU.  (PR 1 measured >= 2x
+  against a loop that padded every client to the max capacity; the loop
+  baseline now also trains at per-group caps, so the gap is smaller —
+  the honest comparison.)
+- ISSUE 2: on a quantity-skewed Table-3-shaped profile, the
+  capacity-grouped engine beats the single uniform-capacity stack
+  (``uniform_capacity=True``), because small-capacity cohort members
+  train their own few steps per epoch instead of the 4500-sample group's
+  mostly-masked step count.
+
+Default profile: a Table-3-shaped fleet scaled to ~100 vehicles (12
+data-rich, the rest data-poor).  ``REPRO_BENCH_FULL=1`` switches to the
+true Table-3 profile (30 vehicles, 12x4500 + 18x45) and drops the loop
+engine (untimeable on CPU at cap 4500).  Every engine gets warm-up
+rounds (jit compile excluded — steady state is what Table-3-scale sweeps
+pay for), then is timed over the remaining rounds.
+
+Fairness note: all engines run the SAME semantics (required for parity),
+including the PR-1 XLA:CPU fixes (reshape pool, loop unrolling, matmul
+shuffle).  The loop baseline trains each client at its capacity group's
+cap, like the grouped engine — the uniform-stack engine is the one
+paying the padding bill.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import List
 
@@ -25,18 +37,46 @@ from repro.fl.mobility import MobilityConfig
 from repro.fl.partition import PartitionConfig
 from repro.fl.rounds import FLSimConfig, FLSimulation
 
-N_CLIENTS = 96
-WARMUP_ROUNDS = 2
-TIMED_ROUNDS = 3
+FULL = os.environ.get("REPRO_BENCH_FULL", "") == "1"
+
+if FULL:                       # true Table 3: 12 x 4500 + 18 x 45
+    N_CLIENTS = 30
+    PART = dict(big_clients=12, big_quantity=4500, small_quantity=45)
+    SAMPLES_PER_CLASS = 7000   # no-dup partition demand is ~5580/class
+                               # after the train/test split; keep real
+                               # headroom so a seed change can't raise
+    PROBE = 256
+    N_CENTRAL = 6
+    WARMUP_ROUNDS, TIMED_ROUNDS = 1, 2
+    ENGINES = ("uniform", "grouped")
+else:                          # Table-3-shaped, scaled to CI budget
+    N_CLIENTS = 96
+    PART = dict(big_clients=12, big_quantity=200, small_quantity=45)
+    SAMPLES_PER_CLASS = 800
+    PROBE = 200
+    N_CENTRAL = 10
+    WARMUP_ROUNDS, TIMED_ROUNDS = 2, 3
+    ENGINES = ("loop", "uniform", "grouped")
+
+# benchmark label -> (FLSimConfig.engine, uniform_capacity)
+_VARIANTS = {"loop": ("loop", False),
+             "uniform": ("batched", True),
+             "grouped": ("batched", False)}
 
 
-def _cfg(engine: str) -> FLSimConfig:
-    part = PartitionConfig(n_clients=N_CLIENTS, big_clients=12,
-                           big_quantity=200, small_quantity=45,
-                           classes_per_client=9)
-    return FLSimConfig(scheme="dcs", engine=engine, local_epochs=1,
-                       probe_samples=200, samples_per_class=800,
-                       partition=part,
+def _cfg(variant: str) -> FLSimConfig:
+    engine, uniform = _VARIANTS[variant]
+    part = PartitionConfig(n_clients=N_CLIENTS, classes_per_client=9,
+                           **PART)
+    # scheme="random": the engine comparison wants cohorts whose big/small
+    # mix mirrors the fleet (18 of 30 Table-3 vehicles are data-poor);
+    # eval-ranked schemes bias cohorts towards big clients and turn this
+    # into a selection-quality bench.  All variants draw the identical
+    # selection sequence, so the comparison stays apples-to-apples.
+    return FLSimConfig(scheme="random", engine=engine, local_epochs=1,
+                       n_clients_central=N_CENTRAL, probe_samples=PROBE,
+                       samples_per_class=SAMPLES_PER_CLASS,
+                       uniform_capacity=uniform, partition=part,
                        mobility=MobilityConfig(n_vehicles=N_CLIENTS, seed=0),
                        seed=0)
 
@@ -44,19 +84,34 @@ def _cfg(engine: str) -> FLSimConfig:
 def bench_engine_throughput() -> List[str]:
     rows = []
     per_round = {}
-    for engine in ("loop", "batched"):
-        sim = FLSimulation(_cfg(engine))
-        sim.warmup()                       # compile cohort buckets up front
+    profile = (f"n_clients={N_CLIENTS};big={PART['big_quantity']};"
+               f"small={PART['small_quantity']};timed_rounds={TIMED_ROUNDS}")
+    for variant in ENGINES:
+        sim = FLSimulation(_cfg(variant))
+        # warmup() pre-executes the trainer once per cohort bucket: cheap
+        # insurance at the scaled profile, but at cap 4500 each bucket
+        # execution costs a full round's train time (the 225-step scan is
+        # execution-bound — its compile is seconds), so FULL relies on
+        # the warm-up rounds to compile organically.  A timed FULL round
+        # that draws an unseen bucket size pays one scan-trainer compile
+        # (~1-10% of a round); acceptable against 40+ min of eager
+        # warmup executions.
+        if not FULL:
+            sim.warmup()               # compile cohort buckets up front
         for r in range(WARMUP_ROUNDS):
             sim.run_round(r)
         t0 = time.perf_counter()
         for r in range(WARMUP_ROUNDS, WARMUP_ROUNDS + TIMED_ROUNDS):
             sim.run_round(r)
         dt = (time.perf_counter() - t0) / TIMED_ROUNDS
-        per_round[engine] = dt
-        rows.append(f"engine_{engine}_round_s,{dt:.3f},"
-                    f"n_clients={N_CLIENTS};timed_rounds={TIMED_ROUNDS}")
-    speedup = per_round["loop"] / max(per_round["batched"], 1e-9)
-    rows.append(f"engine_batched_speedup,{speedup:.2f},"
-                f"claim=batched >=2x at >=20 clients")
+        per_round[variant] = dt
+        rows.append(f"engine_{variant}_round_s,{dt:.3f},{profile}")
+    if "loop" in per_round:
+        speedup = per_round["loop"] / max(per_round["grouped"], 1e-9)
+        rows.append(f"engine_batched_speedup,{speedup:.2f},"
+                    f"claim=batched beats the per-client loop (which now "
+                    f"also trains at per-group caps)")
+    grp = per_round["uniform"] / max(per_round["grouped"], 1e-9)
+    rows.append(f"engine_grouped_speedup,{grp:.2f},"
+                f"claim=capacity groups beat the uniform max-cap stack")
     return rows

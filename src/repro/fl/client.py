@@ -10,7 +10,10 @@ Three call shapes are exposed:
   loop engine uses;
 - batched over a leading client axis (``dataset_loss_batch`` /
   ``local_train_batch``) — one compile and one dispatch for a whole
-  cohort instead of ``O(n_clients)``;
+  cohort instead of ``O(n_clients)``.  The round engine issues one such
+  call per capacity group, so every client in a call shares its group's
+  ``cap`` and ``steps_per_epoch`` (small Table-3 clients stop paying for
+  the 4500-sample group's step count);
 - packed (``dataset_loss_packed``): the Eq. 7 probe over a flat
   concatenation of every client's *valid* probe samples, so no FLOPs are
   spent convolving padding rows.  The batched round engine precomputes
@@ -183,6 +186,11 @@ def _local_train(params: Params, images: jax.Array, labels: jax.Array,
                  prox_mu: float) -> Tuple[Params, jax.Array]:
     """Eq. 1 local update body.  Returns (params, mean last-epoch loss)."""
     cap = images.shape[0]
+    # capacity groups smaller than the nominal batch (45-sample Table-3
+    # clients under a larger batch_size) clamp to one full-capacity batch
+    # per step rather than slicing past the array end
+    batch_size = min(batch_size, cap)
+    steps_per_epoch = max(1, steps_per_epoch)
     global_params = params
     flat = images.reshape(cap, -1)
     unroll = epochs * steps_per_epoch <= _UNROLL_LIMIT
@@ -258,8 +266,14 @@ def local_train_batch(params: Params, images: jax.Array, labels: jax.Array,
 
     Per-client math is identical to ``local_train`` (same key schedule,
     same permutations, same batches), but the step loop is OUTER and the
-    client axis is vmapped INSIDE each step (see module docstring)."""
+    client axis is vmapped INSIDE each step (see module docstring).
+
+    The round engine calls this once per capacity group — every client in
+    a call shares one ``cap``/``steps_per_epoch``, and small groups pay
+    for their own few steps instead of the largest group's."""
     c, cap = images.shape[0], images.shape[1]
+    batch_size = min(batch_size, cap)          # see _local_train
+    steps_per_epoch = max(1, steps_per_epoch)
     stacked = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (c,) + x.shape), params)
     global_stacked = stacked

@@ -14,6 +14,10 @@ from typing import Optional
 
 import numpy as np
 
+# period parameter of the per-vehicle speed-jitter sinusoid: speed varies
+# as jitter * sin(t / _JITTER_PERIOD_S + phase)
+_JITTER_PERIOD_S = 7.0
+
 
 @dataclass(frozen=True)
 class MobilityConfig:
@@ -54,11 +58,21 @@ class FreewayMobility:
         jr = np.random.default_rng(cfg.seed + 37)
         self._jitter_phase = jr.uniform(0, 2 * np.pi, n)
 
+    def displacement_m(self, t_s: float) -> np.ndarray:
+        """Unwrapped displacement since t=0: the exact integral of the
+        instantaneous speed ``speeds + jitter * sin(t/T + phase)`` over
+        ``[0, t_s]``.  The jitter contribution is the integral of a
+        sinusoid, so it stays bounded by ``2 * speed_jitter * T`` for all
+        ``t_s`` instead of growing linearly in elapsed time."""
+        amp, period = self.cfg.speed_jitter, _JITTER_PERIOD_S
+        jitter_disp = amp * period * (
+            np.cos(self._jitter_phase)
+            - np.cos(t_s / period + self._jitter_phase))
+        return self.speeds * t_s + jitter_disp
+
     def positions(self, t_s: float) -> np.ndarray:
         """Deterministic in ``t_s`` (speed jitter is a per-vehicle
-        sinusoid), so the same instant can be queried repeatedly — needed
-        by the staleness experiment."""
-        jitter = self.cfg.speed_jitter * np.sin(
-            t_s / 7.0 + self._jitter_phase)
-        x = self.x0 + (self.speeds + jitter) * t_s
+        sinusoid integrated in closed form), so the same instant can be
+        queried repeatedly — needed by the staleness experiment."""
+        x = self.x0 + self.displacement_m(t_s)
         return np.mod(x, self.cfg.road_length_m)

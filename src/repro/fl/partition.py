@@ -1,4 +1,4 @@
-"""Non-i.i.d. dataset partitioner (paper §6.1).
+"""Non-i.i.d. dataset partitioner (paper §6.1) + capacity-grouped storage.
 
 Rules reproduced from the paper:
 - each vehicle draws from ``classes_per_client`` classes (9 / 6 / 2 in the
@@ -6,11 +6,19 @@ Rules reproduced from the paper:
 - quantity is unbalanced: vehicles 0-11 get ~4500 samples, vehicles 12-29
   get ~45 (Table 3);
 - no sample is duplicated across vehicles.
+
+Storage layout: the Table-3 profile is radically quantity-skewed, so
+padding every client to the single largest quantity makes small clients
+spend ~99% of their local-SGD steps on masked padding rows.
+``stack_clients`` therefore buckets clients by capacity (quantity rounded
+up to a whole number of batches) and returns one fixed-shape
+``ClientGroup`` per distinct capacity — the round engine vmaps one local
+trainer per group instead of one trainer over a uniform max-cap stack.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import Any, List, Tuple
 
 import numpy as np
 
@@ -26,10 +34,43 @@ class PartitionConfig:
     seed: int = 0
 
 
+@dataclass(frozen=True)
+class ClientGroup:
+    """One capacity bucket of the stacked client datasets.
+
+    ``client_ids`` maps the group-local leading axis back to global client
+    indices; ``images``/``labels`` are fixed-shape ``(G, cap, ...)`` stacks
+    (host ``np.ndarray`` or device ``jax.Array`` depending on the engine);
+    valid samples occupy the leading ``n_valid[i]`` rows of each client."""
+    client_ids: np.ndarray          # (G,) int64, global client indices
+    images: Any                     # (G, cap, 28, 28, 1)
+    labels: Any                     # (G, cap)
+    n_valid: np.ndarray             # (G,) int32
+    cap: int
+
+    @property
+    def size(self) -> int:
+        return len(self.client_ids)
+
+
 def client_quantities(cfg: PartitionConfig) -> np.ndarray:
     q = np.full(cfg.n_clients, cfg.small_quantity, np.int64)
     q[: cfg.big_clients] = cfg.big_quantity
     return q
+
+
+def group_capacity(quantity: int, batch_size: int) -> int:
+    """Smallest whole number of batches covering ``quantity`` samples —
+    always >= ``batch_size``, so every capacity group takes at least one
+    local step per epoch (45-sample Table-3 clients included)."""
+    q = max(int(quantity), 1)
+    return int(np.ceil(q / batch_size) * batch_size)
+
+
+def steps_per_epoch(cap: int, batch_size: int) -> int:
+    """Local SGD steps per epoch at capacity ``cap`` — guarded against 0
+    so groups smaller than the batch size still train."""
+    return max(1, cap // batch_size)
 
 
 def partition(images: np.ndarray, labels: np.ndarray,
@@ -63,19 +104,30 @@ def partition(images: np.ndarray, labels: np.ndarray,
 
 def stack_clients(parts: List[Tuple[np.ndarray, np.ndarray]],
                   batch_size: int = 1,
-                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Pad every client to one uniform capacity and stack.
+                  uniform: bool = False) -> List[ClientGroup]:
+    """Stack per-client datasets into capacity-grouped fixed-shape tensors.
 
-    The capacity is the largest client's quantity rounded up to a multiple
-    of ``batch_size``, so the batched round engine can vmap one fixed-shape
-    local trainer over the client axis.  Trade-off: with extreme quantity
-    skew (Table 3 full profile: 4500 vs 45) small clients spend most local
-    steps on masked padding slots — the per-capacity-group trainer that
-    would fix this is an open ROADMAP item.  Returns
-    (images (C, cap, 28, 28, 1), labels (C, cap), n_valid (C,))."""
-    cap = max(max(len(p[1]) for p in parts), batch_size)
-    cap = int(np.ceil(cap / batch_size) * batch_size)
-    return pad_clients(parts, cap)
+    Each client's capacity is its quantity rounded up to a whole number of
+    batches (``group_capacity``); clients sharing a capacity are stacked
+    into one ``ClientGroup``, largest capacity first.  The Table-3 full
+    profile (4500 vs 45 samples, batch 20) yields exactly two groups —
+    a 4500-cap and a 60-cap one — so small clients train 3 steps/epoch
+    instead of 225 steps of mostly masked padding.
+
+    ``uniform=True`` reproduces the single max-capacity stack (every
+    client padded to the largest group's cap, one group) — kept as the
+    comparison baseline for ``benchmarks/engine_throughput.py``."""
+    caps = [group_capacity(len(p[1]), batch_size) for p in parts]
+    if uniform:
+        caps = [max(caps)] * len(parts)
+    groups = []
+    for cap in sorted(set(caps), reverse=True):
+        ids = np.asarray([i for i, c in enumerate(caps) if c == cap],
+                         np.int64)
+        im, lb, nv = pad_clients([parts[i] for i in ids], cap)
+        groups.append(ClientGroup(client_ids=ids, images=im, labels=lb,
+                                  n_valid=nv, cap=cap))
+    return groups
 
 
 def pad_clients(parts: List[Tuple[np.ndarray, np.ndarray]],

@@ -16,25 +16,36 @@ the fuzzy evaluator and one of the three selection schemes.  Each round:
   7. aggregate: FedAvg (Eq. 2) over the survivors;
   8. account: state-maintenance vs evaluation-exchange communication.
 
-Two engines implement steps 2/5/7 over the same stacked
-``(n_clients, cap, ...)`` dataset tensors:
+Client datasets are stored **capacity-grouped**: ``stack_clients``
+buckets clients by quantity-rounded-to-batches capacity and returns one
+fixed-shape ``ClientGroup`` per bucket (Table-3 full profile: a 4500-cap
+group of 12 and a 60-cap group of 18).  Two engines implement steps
+2/5/7 over these groups:
 
 - ``engine="batched"`` (default): the Eq. 7 probe is one fused forward
   pass over a packed concatenation of every client's valid probe samples
   (padding rows cost nothing), local SGD is one ``vmap(local_train)``
-  over the selected cohort (gathered into a bucketed fixed-size tensor so
-  jit sees a handful of shapes), and the selection/deadline mask is
-  folded into the FedAvg weights — stragglers and cohort padding rows
-  contribute zero weight instead of being skipped in Python.  One
-  compile + a constant number of dispatches per round.
+  per capacity group over that group's surviving cohort (gathered into a
+  bucketed fixed-size tensor so jit sees a handful of shapes per group),
+  and the selection/deadline mask is folded into the FedAvg weights —
+  all groups aggregate in a single ``fedavg_masked`` over concatenated
+  per-group stacks and weights.  Small-capacity cohorts train their own
+  few steps per epoch instead of the largest group's.
 - ``engine="loop"``: the reference per-client Python loop, kept for
-  parity testing (see tests/test_engine_parity.py).
+  parity testing (see tests/test_engine_parity.py).  It trains each
+  client at its own group's capacity, so the two engines stay
+  numerically equivalent sample-for-sample.
 
 Both engines draw per-client training randomness from the same
-``fold_in(round, client)`` schedule, so they are numerically equivalent.
+``fold_in(round, client)`` schedule, and both treat an **empty round**
+(no client survives selection + deadline — e.g. every evaluation below
+``E_tau``) as a no-op broadcast: the global model is unchanged, exactly.
+Per-group empty cohorts are skipped the same way — a group never pads
+from an empty cohort.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -53,7 +64,8 @@ from repro.fl.client import (dataset_loss, dataset_loss_packed,
                              local_train_batch)
 from repro.fl.mobility import FreewayMobility, MobilityConfig
 from repro.fl.network import CellularNetwork, NetworkConfig
-from repro.fl.partition import PartitionConfig, partition, stack_clients
+from repro.fl.partition import (PartitionConfig, partition, stack_clients,
+                                steps_per_epoch)
 from repro.fl.timing import TimingConfig, completes_before_deadline, \
     training_time_s
 from repro.models.cnn import init_cnn
@@ -84,6 +96,9 @@ class FLSimConfig:
                                          # samples; ranking-equivalent)
     samples_per_class: int = 6600        # source pool size (>= per-class
                                          # demand of the no-dup partition)
+    uniform_capacity: bool = False       # True: single max-cap group (the
+                                         # pre-grouping layout; benchmark
+                                         # baseline only)
     seed: int = 0
     partition: PartitionConfig = field(default_factory=PartitionConfig)
     mobility: MobilityConfig = field(default_factory=MobilityConfig)
@@ -106,21 +121,28 @@ class FLSimulation:
 
         parts = partition(tr_i, tr_l, cfg.partition)
         self.n = cfg.partition.n_clients
-        im, lb, nv = stack_clients(parts, batch_size=cfg.batch_size)
-        self.cap = im.shape[1]
-        self.steps_per_epoch = self.cap // cfg.batch_size
-        self.n_valid = nv                    # (C,) int32, host side
+        self.groups = stack_clients(parts, batch_size=cfg.batch_size,
+                                    uniform=cfg.uniform_capacity)
+        self.cap = max(g.cap for g in self.groups)
+        self._group_steps = [steps_per_epoch(g.cap, cfg.batch_size)
+                             for g in self.groups]
+        # global (C,) validity + client -> (group, group-local row) map
+        self.n_valid = np.zeros(self.n, np.int32)
+        self._slot = np.zeros((self.n, 2), np.int64)
+        for gi, g in enumerate(self.groups):
+            self.n_valid[g.client_ids] = g.n_valid
+            self._slot[g.client_ids, 0] = gi
+            self._slot[g.client_ids, 1] = np.arange(g.size)
         # each engine keeps only the copy it reads, the dataset is the
         # memory bill: host arrays back the batched engine's cohort
         # gather + probe packing, device arrays feed the loop engine
         if cfg.engine == "batched":
-            self._np_images, self._np_labels = im, lb
-            self.images = self.labels = None
             self._build_packed_probe()
         else:
-            self._np_images = self._np_labels = None
-            self.images = jnp.asarray(im)    # (C, cap, 28, 28, 1)
-            self.labels = jnp.asarray(lb)    # (C, cap)
+            self.groups = [dataclasses.replace(g,
+                                               images=jnp.asarray(g.images),
+                                               labels=jnp.asarray(g.labels))
+                           for g in self.groups]
 
         self.slowdown = rng.uniform(*cfg.slowdown_range, self.n)
         self.network = CellularNetwork(cfg.network)
@@ -144,13 +166,20 @@ class FLSimulation:
 
         Client membership is static across rounds (the partition never
         changes), so the packing is computed once; each round's probe is
-        then a single fused forward pass with zero padding-row FLOPs."""
+        then a single fused forward pass with zero padding-row FLOPs.
+        Clients are packed in global-id order regardless of their
+        capacity group."""
         probe = min(self.cfg.probe_samples, self.cap)
         take = np.minimum(self.n_valid, probe).astype(np.int64)
+        ims, lbs = [], []
+        for i in range(self.n):
+            gi, li = self._slot[i]
+            g = self.groups[gi]
+            ims.append(g.images[li, :take[i]])
+            lbs.append(g.labels[li, :take[i]])
+        flat_im = np.concatenate(ims)
+        flat_lb = np.concatenate(lbs)
         seg = np.repeat(np.arange(self.n), take)
-        row = np.concatenate([np.arange(t) for t in take])
-        flat_im = self._np_images[seg, row]
-        flat_lb = self._np_labels[seg, row]
         pad = (-len(seg)) % self._PROBE_BATCH
         if pad:
             flat_im = np.concatenate(
@@ -185,12 +214,14 @@ class FLSimulation:
                 self._probe_seg, self._probe_counts, n_clients=self.n,
                 batch=self._PROBE_BATCH))
         else:
-            lf_raw = np.array([
-                float(dataset_loss(
-                    self.params, self.images[i, :probe],
-                    self.labels[i, :probe],
-                    jnp.int32(min(int(self.n_valid[i]), probe)), batch=128))
-                for i in range(self.n)])
+            lf_raw = np.empty(self.n)
+            for i in range(self.n):
+                gi, li = self._slot[i]
+                g = self.groups[gi]
+                p = min(probe, g.cap)
+                lf_raw[i] = float(dataset_loss(
+                    self.params, g.images[li, :p], g.labels[li, :p],
+                    jnp.int32(min(int(self.n_valid[i]), p)), batch=128))
         lf = lf_raw / max(lf_raw.max(), 1e-9)
         return np.stack([sq, ta, cc, lf], axis=1).astype(np.float32)
 
@@ -230,15 +261,19 @@ class FLSimulation:
     def _train_loop(self, survivors: np.ndarray,
                     keys: jax.Array) -> None:
         """Reference path: per-client jitted local_train calls + list
-        FedAvg over the survivors."""
+        FedAvg over the survivors.  An empty round is a no-op broadcast.
+        Each client trains at its own capacity group's cap/steps, so the
+        per-client math matches the grouped batched engine exactly."""
         cfg = self.cfg
         new_models, weights = [], []
         for i in np.where(survivors)[0]:
+            gi, li = self._slot[i]
+            g = self.groups[gi]
             p_i, _ = local_train(
-                self.params, self.images[i], self.labels[i],
+                self.params, g.images[li], g.labels[li],
                 jnp.int32(self.n_valid[i]), keys[i], epochs=cfg.local_epochs,
                 batch_size=cfg.batch_size,
-                steps_per_epoch=self.steps_per_epoch, lr=cfg.lr,
+                steps_per_epoch=self._group_steps[gi], lr=cfg.lr,
                 prox_mu=cfg.prox_mu)
             new_models.append(p_i)
             weights.append(float(self.n_valid[i]))
@@ -247,58 +282,76 @@ class FLSimulation:
 
     @staticmethod
     def _bucket(k: int) -> int:
-        """Cohort tensor size for k survivors: next multiple of 2, min 4 —
+        """Cohort tensor size for k survivors: next multiple of 2, min 2 —
         jit compiles a handful of shapes no matter how the per-round
-        selection count fluctuates."""
-        return max(4, k + (k % 2))
+        selection count fluctuates.  The floor matters for capacity
+        groups: a Table-3 big-group cohort of 1-2 must not train (and
+        compile) 4 padded 4500-sample slots."""
+        return max(2, k + (k % 2))
 
     def warmup(self, buckets=None) -> None:
         """Pre-compile the batched trainer for the given cohort bucket
-        sizes (the jit cache persists across rounds).  The default covers
-        small cohorts plus the central-selection budget; a cohort that
-        lands in an uncovered bucket still works — it just compiles on
-        first use.  No-op for the loop engine."""
+        sizes in every capacity group (the jit cache persists across
+        rounds).  The default covers small cohorts plus the
+        central-selection budget, clipped to each group's size; a cohort
+        that lands in an uncovered bucket still works — it just compiles
+        on first use.  No-op for the loop engine."""
         if self.cfg.engine != "batched":
             return
         cfg = self.cfg
         if buckets is None:
-            buckets = sorted({4, 6, 8,
+            buckets = sorted({2, 4, 6, 8,
                               self._bucket(min(cfg.n_clients_central,
                                                self.n))})
         keys = self._round_keys(0)
-        for b in buckets:
-            idx = np.zeros(b, np.int64)
-            local_train_batch(
-                self.params, jnp.asarray(self._np_images[idx]),
-                jnp.asarray(self._np_labels[idx]),
-                jnp.asarray(self.n_valid[idx]), keys[jnp.asarray(idx)],
-                epochs=cfg.local_epochs, batch_size=cfg.batch_size,
-                steps_per_epoch=self.steps_per_epoch, lr=cfg.lr,
-                prox_mu=cfg.prox_mu)
+        for gi, g in enumerate(self.groups):
+            for b in sorted({min(b, self._bucket(g.size)) for b in buckets}):
+                idx = np.zeros(b, np.int64)
+                local_train_batch(
+                    self.params, jnp.asarray(g.images[idx]),
+                    jnp.asarray(g.labels[idx]),
+                    jnp.asarray(g.n_valid[idx]),
+                    keys[jnp.asarray(g.client_ids[idx])],
+                    epochs=cfg.local_epochs, batch_size=cfg.batch_size,
+                    steps_per_epoch=self._group_steps[gi], lr=cfg.lr,
+                    prox_mu=cfg.prox_mu)
 
     def _train_batched(self, survivors: np.ndarray,
                        keys: jax.Array) -> None:
-        """One vmap(local_train) over the surviving cohort; the mask
-        enters Eq. 2 only through the FedAvg weights — cohort padding
-        rows train like everyone else and aggregate at weight zero.
-        Stragglers are dropped at the gather (their update is discarded
-        either way; at IoV scale their local SGD FLOPs are not)."""
+        """One vmap(local_train) per capacity group over that group's
+        surviving cohort; the mask enters Eq. 2 only through the FedAvg
+        weights — cohort padding rows train like everyone else and
+        aggregate at weight zero.  Stragglers are dropped at the gather
+        (their update is discarded either way; at IoV scale their local
+        SGD FLOPs are not).  Groups with an empty cohort are skipped —
+        never padded from a nonexistent ``cohort[0]`` — and a fully empty
+        round leaves the global model untouched (no-op broadcast)."""
         cfg = self.cfg
         if not survivors.any():
-            return
-        cohort = np.where(survivors)[0]
-        k = len(cohort)
-        bucket = self._bucket(k)
-        idx = np.concatenate([cohort, np.full(bucket - k, cohort[0])])
-        stacked, _ = local_train_batch(
-            self.params, jnp.asarray(self._np_images[idx]),
-            jnp.asarray(self._np_labels[idx]), jnp.asarray(self.n_valid[idx]),
-            keys[jnp.asarray(idx)], epochs=cfg.local_epochs,
-            batch_size=cfg.batch_size, steps_per_epoch=self.steps_per_epoch,
-            lr=cfg.lr, prox_mu=cfg.prox_mu)
-        w = (self.n_valid * survivors)[idx].astype(np.float32)
-        w[k:] = 0.0                          # padding duplicates drop out
-        self.params = fedavg_masked(stacked, jnp.asarray(w))  # Eq. 2
+            return                               # empty round: no-op
+        stacks, weights = [], []
+        for gi, g in enumerate(self.groups):
+            cohort = np.where(survivors[g.client_ids])[0]  # group-local
+            k = len(cohort)
+            if k == 0:
+                continue                         # empty cohort: skip group
+            bucket = self._bucket(k)
+            idx = np.concatenate([cohort, np.full(bucket - k, cohort[0])])
+            stacked, _ = local_train_batch(
+                self.params, jnp.asarray(g.images[idx]),
+                jnp.asarray(g.labels[idx]), jnp.asarray(g.n_valid[idx]),
+                keys[jnp.asarray(g.client_ids[idx])],
+                epochs=cfg.local_epochs, batch_size=cfg.batch_size,
+                steps_per_epoch=self._group_steps[gi], lr=cfg.lr,
+                prox_mu=cfg.prox_mu)
+            w = g.n_valid[idx].astype(np.float32)
+            w[k:] = 0.0                          # padding duplicates drop out
+            stacks.append(stacked)
+            weights.append(w)
+        merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                              *stacks)
+        self.params = fedavg_masked(
+            merged, jnp.asarray(np.concatenate(weights)))  # Eq. 2
 
     # ------------------------------------------------------------------
     def run_round(self, rnd: int) -> Dict[str, float]:

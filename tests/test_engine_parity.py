@@ -1,7 +1,13 @@
 """Parity between the batched vmapped round engine and the reference
 per-client loop engine (ISSUE 1 acceptance): identical selection masks
 and matching accuracy trajectories for all three schemes, plus
-straggler masking via zeroed FedAvg weights."""
+straggler masking via zeroed FedAvg weights.
+
+ISSUE 2 extends the same harness to the capacity-grouped engine: the
+standard profile below already yields two capacity groups (120- and
+40-sample quantities), a dedicated test drives a Table-3-shaped skew,
+and empty rounds (nobody clears selection + deadline) must be a no-op
+broadcast in both engines."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,13 +23,14 @@ N_ROUNDS = 3
 
 
 def _cfg(scheme: str, engine: str, **kw) -> FLSimConfig:
+    kw.setdefault("partition",
+                  PartitionConfig(n_clients=N_CLIENTS, big_clients=3,
+                                  big_quantity=120, small_quantity=40,
+                                  classes_per_client=9))
+    kw.setdefault("mobility", MobilityConfig(n_vehicles=N_CLIENTS, seed=0))
     return FLSimConfig(
         scheme=scheme, engine=engine, n_rounds=N_ROUNDS, local_epochs=1,
-        samples_per_class=260, probe_samples=64,
-        partition=PartitionConfig(n_clients=N_CLIENTS, big_clients=3,
-                                  big_quantity=120, small_quantity=40,
-                                  classes_per_client=9),
-        mobility=MobilityConfig(n_vehicles=N_CLIENTS, seed=0), seed=0, **kw)
+        samples_per_class=260, probe_samples=64, seed=0, **kw)
 
 
 def _run(scheme: str, engine: str, **kw):
@@ -84,6 +91,65 @@ def test_fedavg_masked_zero_weight_rows_drop_out():
     ref = fedavg([{"w": rows[0]}, {"w": rows[2]}], [2.0, 1.0])
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(ref["w"]),
                                rtol=1e-6)
+
+
+def test_grouped_parity_table3_skew():
+    """Grouped-engine parity on a Table-3-shaped quantity skew (200 vs 45
+    samples -> two capacity groups): masks identical to the loop engine,
+    accuracy within 1e-5."""
+    kw = dict(partition=PartitionConfig(n_clients=N_CLIENTS, big_clients=3,
+                                        big_quantity=200, small_quantity=45,
+                                        classes_per_client=9))
+    rows_l, masks_l = _run("dcs", "loop", **kw)
+    rows_b, masks_b = _run("dcs", "batched", **kw)
+    sim = FLSimulation(_cfg("dcs", "batched", **kw))
+    assert [g.cap for g in sim.groups] == [200, 60]
+    for r in range(N_ROUNDS):
+        np.testing.assert_array_equal(masks_l[r], masks_b[r])
+        assert rows_l[r]["n_aggregated"] == rows_b[r]["n_aggregated"]
+        assert abs(rows_l[r]["accuracy"] - rows_b[r]["accuracy"]) <= 1e-5
+
+
+def test_uniform_capacity_single_group():
+    """uniform_capacity=True reproduces the PR-1 single max-cap stack."""
+    sim = FLSimulation(_cfg("dcs", "batched", uniform_capacity=True))
+    assert len(sim.groups) == 1
+    assert sim.groups[0].cap == sim.cap
+    assert sim.groups[0].size == N_CLIENTS
+
+
+def test_partial_group_cohort_parity():
+    """A cohort confined to one capacity group trains identically in both
+    engines (the batched engine must skip the other group's empty cohort
+    rather than pad from it)."""
+    sim_b = FLSimulation(_cfg("dcs", "batched"))
+    sim_l = FLSimulation(_cfg("dcs", "loop"))
+    survivors = np.zeros(N_CLIENTS, bool)
+    survivors[[4, 7]] = True                 # small-capacity clients only
+    sim_b._train_batched(survivors, sim_b._round_keys(0))
+    sim_l._train_loop(survivors, sim_l._round_keys(0))
+    for a, b in zip(jax.tree.leaves(sim_b.params),
+                    jax.tree.leaves(sim_l.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=2e-6)
+
+
+# --------------------------------------------------------------------------
+# empty rounds
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["loop", "batched"])
+def test_empty_round_is_noop_broadcast(engine):
+    """When every evaluation is below E_tau nobody is selected: the round
+    must leave the global model bit-identical in both engines."""
+    sim = FLSimulation(_cfg("dcs", engine, e_tau=1e9))
+    before = [np.asarray(x).copy() for x in jax.tree.leaves(sim.params)]
+    row = sim.run_round(0)
+    assert row["n_selected"] == 0
+    assert row["n_aggregated"] == 0
+    assert row["mean_eval_selected"] == 0.0
+    for b, a in zip(before, jax.tree.leaves(sim.params)):
+        np.testing.assert_array_equal(b, np.asarray(a))
 
 
 def test_all_stragglers_leave_global_model_untouched():

@@ -13,7 +13,8 @@ from repro.data.synthetic import make_dataset, train_test_split
 from repro.fl.aggregation import fedavg, global_loss
 from repro.fl.mobility import FreewayMobility, MobilityConfig
 from repro.fl.network import CellularNetwork, NetworkConfig
-from repro.fl.partition import PartitionConfig, partition, pad_clients
+from repro.fl.partition import (PartitionConfig, group_capacity, partition,
+                                pad_clients, stack_clients, steps_per_epoch)
 from repro.fl.timing import TimingConfig, completes_before_deadline, \
     training_time_s
 
@@ -62,6 +63,74 @@ def test_pad_clients_shapes():
     im, lb, nv = pad_clients(parts, cap=120)
     assert im.shape == (4, 120, 28, 28, 1)
     assert (nv <= 120).all() and nv[0] >= 99
+
+
+# --------------------------------------------------------------------------
+# capacity groups
+# --------------------------------------------------------------------------
+
+def test_stack_clients_capacity_groups():
+    """Quantity skew buckets into per-capacity groups (largest first) that
+    cover every client exactly once and preserve the per-client data."""
+    images, labels = make_dataset(300, seed=2)
+    cfg = PartitionConfig(n_clients=6, classes_per_client=9, big_clients=2,
+                          big_quantity=180, small_quantity=45)
+    parts = partition(images, labels, cfg)
+    groups = stack_clients(parts, batch_size=20)
+    assert [g.cap for g in groups] == [180, 60]
+    assert [g.size for g in groups] == [2, 4]
+    seen = np.concatenate([g.client_ids for g in groups])
+    assert sorted(seen.tolist()) == list(range(6))
+    for g in groups:
+        assert g.images.shape == (g.size, g.cap, 28, 28, 1)
+        assert g.cap % 20 == 0
+        for li, ci in enumerate(g.client_ids):
+            n = int(g.n_valid[li])
+            assert n == len(parts[ci][1])
+            np.testing.assert_array_equal(g.images[li, :n], parts[ci][0])
+            np.testing.assert_array_equal(g.labels[li, :n], parts[ci][1])
+            assert (g.labels[li, n:] == 0).all()
+
+
+def test_stack_clients_uniform_single_group():
+    images, labels = make_dataset(300, seed=2)
+    cfg = PartitionConfig(n_clients=6, classes_per_client=9, big_clients=2,
+                          big_quantity=180, small_quantity=45)
+    parts = partition(images, labels, cfg)
+    (g,) = stack_clients(parts, batch_size=20, uniform=True)
+    assert g.cap == 180 and g.size == 6
+    np.testing.assert_array_equal(g.client_ids, np.arange(6))
+
+
+def test_group_capacity_and_steps_guard():
+    """Groups smaller than the batch still take >= 1 local step/epoch."""
+    assert group_capacity(45, 20) == 60
+    assert group_capacity(45, 64) == 64        # rounded up to one batch
+    assert group_capacity(0, 20) == 20
+    assert steps_per_epoch(60, 20) == 3
+    assert steps_per_epoch(45, 64) == 1        # guarded against 0
+    assert steps_per_epoch(0, 20) == 1
+
+
+def test_small_group_trains_at_least_one_step():
+    """A 45-sample client under a 64-sample batch must still produce a
+    local update (effective batch clamps to the capacity)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.mnist_cnn import CONFIG as CNN_CFG
+    from repro.data.synthetic import make_dataset as mk
+    from repro.fl.client import local_train
+    from repro.models.cnn import init_cnn
+
+    images, labels = mk(5, seed=9)
+    im, lb = jnp.asarray(images[:45]), jnp.asarray(labels[:45])
+    g = init_cnn(jax.random.PRNGKey(0), CNN_CFG)
+    p, _ = local_train(g, im, lb, jnp.int32(45), jax.random.PRNGKey(1),
+                       epochs=1, batch_size=64,
+                       steps_per_epoch=steps_per_epoch(45, 64), lr=0.1)
+    moved = sum(float(jnp.abs(a - b).sum()) for a, b in
+                zip(jax.tree.leaves(p), jax.tree.leaves(g)))
+    assert moved > 0.0
 
 
 # --------------------------------------------------------------------------
@@ -148,6 +217,32 @@ def test_mobility_extreme_clusters():
     x = mob.positions(0.0)
     assert (x[rank[:10]] < 200.0).all()
     assert (x[rank[10:]] > 800.0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.0, 1e5), st.floats(0.1, 5.0), st.integers(0, 20))
+def test_mobility_jitter_displacement_bounded(t, jitter, seed):
+    """The speed jitter is a sinusoid integrated in closed form, so its
+    displacement contribution stays bounded for all t (it must NOT grow
+    linearly with elapsed time as the pre-fix ``(v + jitter(t)) * t``
+    form did)."""
+    from repro.fl.mobility import _JITTER_PERIOD_S
+    mob = FreewayMobility(MobilityConfig(n_vehicles=8, speed_jitter=jitter,
+                                         seed=seed))
+    drift = mob.displacement_m(t) - mob.speeds * t
+    bound = 2.0 * jitter * _JITTER_PERIOD_S
+    assert np.all(np.abs(drift) <= bound + 1e-6), (t, drift)
+    # positions are the wrapped displacement
+    np.testing.assert_allclose(
+        mob.positions(t),
+        np.mod(mob.x0 + mob.displacement_m(t), 1000.0))
+
+
+def test_mobility_displacement_zero_at_t0():
+    mob = FreewayMobility(MobilityConfig(n_vehicles=8, seed=5))
+    np.testing.assert_allclose(mob.displacement_m(0.0), 0.0, atol=1e-12)
+    np.testing.assert_allclose(mob.positions(0.0),
+                               np.mod(mob.x0, 1000.0))
 
 
 def test_network_rate_bounds_and_ordering():

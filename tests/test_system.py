@@ -65,6 +65,26 @@ def test_dcs_vs_ccs_fuzzy_selection_overlap():
     assert inter >= max(1, int(0.4 * m_dcs.sum()))
 
 
+def test_grouped_engine_table3_skew_round():
+    """The batched engine on a Table-3-shaped quantity skew forms one
+    capacity group per quantity bucket and completes a round with the
+    skewed small clients eligible to aggregate."""
+    sim = FLSimulation(FLSimConfig(
+        scheme="ccs-fuzzy", n_rounds=1, local_epochs=1,
+        samples_per_class=300, probe_samples=64,
+        partition=PartitionConfig(n_clients=10, big_clients=3,
+                                  big_quantity=200, small_quantity=45,
+                                  classes_per_client=9),
+        mobility=MobilityConfig(n_vehicles=10, seed=0), seed=0))
+    assert [g.cap for g in sim.groups] == [200, 60]
+    assert sum(g.size for g in sim.groups) == 10
+    sim.warmup()
+    row = sim.run_round(0)
+    assert 0.0 <= row["accuracy"] <= 1.0
+    assert row["n_selected"] >= 1
+    assert row["n_aggregated"] <= row["n_selected"]
+
+
 @pytest.mark.slow
 def test_one_round_improves_over_init():
     # 4 rounds of ~4 clients x 6 local steps: enough to clear random (0.1)
