@@ -13,7 +13,8 @@ import sys
 import time
 import traceback
 
-from benchmarks.engine_throughput import bench_engine_throughput
+from benchmarks.engine_throughput import (bench_engine_throughput,
+                                          bench_trainer_unroll)
 from benchmarks.kernels_bench import (bench_fuzzy_eval, bench_neighbor_elect,
                                       bench_wkv6)
 from benchmarks.paper_figures import (bench_fig2_overhead,
@@ -38,6 +39,7 @@ BENCHES = {
     "selection_collectives": bench_selection_collectives,
     "staleness": bench_staleness,
     "roofline": bench_roofline_table,
+    "trainer_unroll": bench_trainer_unroll,
 }
 
 

@@ -78,6 +78,18 @@ class FuzzyEvaluator:
             self.rule_table, self.rule_levels, self.level_centers,
             impl=self.impl)
 
+    def evaluate_raw(self, x_raw: jax.Array) -> jax.Array:
+        """x_raw: (P, 4) *raw* feature columns — Eq. 8 per-column
+        max-scaling is applied inside the kernel (``normalize=True``).
+        Object-level convenience mirroring the staged ``evaluate`` stage
+        (``fl/pipeline.py``, which passes its own statics straight to
+        ``kops.fuzzy_eval``); both share the single kernel entry point,
+        and tests/test_fuzzy.py pins them interchangeable."""
+        return kops.fuzzy_eval(
+            x_raw, jnp.asarray(self.cfg.means), jnp.asarray(self.cfg.sigmas),
+            self.rule_table, self.rule_levels, self.level_centers,
+            impl=self.impl, normalize=True)
+
     def level_of(self, evaluation: jax.Array) -> jax.Array:
         """Nearest output level L0..L8 for a defuzzified value."""
         return jnp.argmin(

@@ -53,6 +53,16 @@ Params = Any
 # (past it, compile time beats the while-loop slow path)
 _UNROLL_LIMIT = 64
 
+# step loops too long to unroll fully (the Table-3 cap-4500 trainer: 225
+# steps/epoch) still pay the XLA:CPU while-loop overhead per iteration.
+# Chunk-unrolling the scan body (lax.scan's ``unroll=``) amortizes that
+# overhead over a block of straight-line steps while keeping compile
+# time bounded; the win is modest when the body is a full conv grad
+# (~1.1x on the cap-1600 trainer, benchmarks/engine_throughput.py
+# trainer_unroll) but it is free at runtime and compounds with epochs.
+# Math is unchanged: the same steps run in the same order.
+_SCAN_UNROLL = 8
+
 # epoch-shuffle form: the one-hot matmul is O(cap^2) — a clear win over
 # the scalar gather path at small caps, a memory/FLOP blowup at the
 # Table-3 full profile (cap ~4500, where a (C, cap, cap) one-hot is GBs)
@@ -71,14 +81,15 @@ def _shuffle_rows(flat: jax.Array, perm: jax.Array,
 
 
 def _chunk_reduce(body, init, n: int):
-    """acc = body(acc, i) for i in range(n) — unrolled when small."""
+    """acc = body(acc, i) for i in range(n) — unrolled when small,
+    chunk-unrolled scan past the limit."""
     if n <= _UNROLL_LIMIT:
         acc = init
         for i in range(n):
             acc = body(acc, jnp.int32(i))
         return acc
     return jax.lax.scan(lambda a, i: (body(a, i), None), init,
-                        jnp.arange(n))[0]
+                        jnp.arange(n), unroll=_SCAN_UNROLL)[0]
 
 
 # --------------------------------------------------------------------------
@@ -183,7 +194,8 @@ def _sample_nll(logits: jax.Array, labels: jax.Array,
 def _local_train(params: Params, images: jax.Array, labels: jax.Array,
                  n_valid: jax.Array, key: jax.Array, epochs: int,
                  batch_size: int, steps_per_epoch: int, lr: float,
-                 prox_mu: float) -> Tuple[Params, jax.Array]:
+                 prox_mu: float,
+                 scan_unroll: int = _SCAN_UNROLL) -> Tuple[Params, jax.Array]:
     """Eq. 1 local update body.  Returns (params, mean last-epoch loss)."""
     cap = images.shape[0]
     # capacity groups smaller than the nominal batch (45-sample Table-3
@@ -224,7 +236,8 @@ def _local_train(params: Params, images: jax.Array, labels: jax.Array,
                 p, loss = bstep(p, jnp.int32(i))
                 losses.append(loss)
             return (p, jnp.stack(losses).mean()), None
-        p, losses = jax.lax.scan(bstep, p, jnp.arange(steps_per_epoch))
+        p, losses = jax.lax.scan(bstep, p, jnp.arange(steps_per_epoch),
+                                 unroll=scan_unroll)
         return (p, losses.mean()), None
 
     keys = jax.random.split(key, epochs)
@@ -239,23 +252,27 @@ def _local_train(params: Params, images: jax.Array, labels: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("epochs", "batch_size",
                                              "steps_per_epoch", "lr",
-                                             "prox_mu"))
+                                             "prox_mu", "scan_unroll"))
 def local_train(params: Params, images: jax.Array, labels: jax.Array,
                 n_valid: jax.Array, key: jax.Array, *, epochs: int,
                 batch_size: int, steps_per_epoch: int, lr: float = 0.05,
-                prox_mu: float = 0.0) -> Tuple[Params, jax.Array]:
+                prox_mu: float = 0.0,
+                scan_unroll: int = _SCAN_UNROLL) -> Tuple[Params, jax.Array]:
     """Per-client Eq. 1 local update loop."""
     return _local_train(params, images, labels, n_valid, key, epochs,
-                        batch_size, steps_per_epoch, lr, prox_mu)
+                        batch_size, steps_per_epoch, lr, prox_mu,
+                        scan_unroll)
 
 
 @functools.partial(jax.jit, static_argnames=("epochs", "batch_size",
                                              "steps_per_epoch", "lr",
-                                             "prox_mu"))
+                                             "prox_mu", "scan_unroll"))
 def local_train_batch(params: Params, images: jax.Array, labels: jax.Array,
                       n_valid: jax.Array, keys: jax.Array, *, epochs: int,
                       batch_size: int, steps_per_epoch: int, lr: float = 0.05,
-                      prox_mu: float = 0.0) -> Tuple[Params, jax.Array]:
+                      prox_mu: float = 0.0,
+                      scan_unroll: int = _SCAN_UNROLL
+                      ) -> Tuple[Params, jax.Array]:
     """Eq. 1 local SGD for a whole cohort in one fused call.
 
     images: (C, cap, 28,28,1), labels: (C, cap), n_valid: (C,), keys:
@@ -312,7 +329,8 @@ def local_train_batch(params: Params, images: jax.Array, labels: jax.Array,
                 p, loss = bstep(p, jnp.int32(i))
                 losses.append(loss)
             return (p, jnp.stack(losses).mean(axis=0)), None
-        p, losses = jax.lax.scan(bstep, p, jnp.arange(steps_per_epoch))
+        p, losses = jax.lax.scan(bstep, p, jnp.arange(steps_per_epoch),
+                                 unroll=scan_unroll)
         return (p, losses.mean(axis=0)), None
 
     # per-client epoch keys, split exactly as local_train splits them

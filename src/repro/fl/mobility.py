@@ -12,6 +12,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 # period parameter of the per-vehicle speed-jitter sinusoid: speed varies
@@ -76,3 +78,16 @@ class FreewayMobility:
         queried repeatedly — needed by the staleness experiment."""
         x = self.x0 + self.displacement_m(t_s)
         return np.mod(x, self.cfg.road_length_m)
+
+
+def positions_jax(x0: jax.Array, speeds: jax.Array, jitter_phase: jax.Array,
+                  t_s: jax.Array, *, road_length_m: float,
+                  speed_jitter: float) -> jax.Array:
+    """jax-traceable twin of ``FreewayMobility.positions``: same closed-
+    form jitter integral over the model's constant arrays, usable inside
+    the staged selection prefix (``fl/pipeline.py``) where ``t_s`` is a
+    traced scalar."""
+    jitter_disp = speed_jitter * _JITTER_PERIOD_S * (
+        jnp.cos(jitter_phase)
+        - jnp.cos(t_s / _JITTER_PERIOD_S + jitter_phase))
+    return jnp.mod(x0 + speeds * t_s + jitter_disp, road_length_m)

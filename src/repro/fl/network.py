@@ -19,6 +19,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -96,3 +98,76 @@ class CellularNetwork:
     def upload_time_s(self, pos: np.ndarray, payload_bytes: float,
                       latency_s: float = 0.2) -> np.ndarray:
         return payload_bytes * 8.0 / self.true_rate_bps(pos) + latency_s
+
+
+# --------------------------------------------------------------------------
+# jax-traceable twins (staged pipeline, fl/pipeline.py)
+#
+# Same math as CellularNetwork, but pure: the stateful numpy generator is
+# replaced by explicit PRNG keys, so the selection prefix jits as one
+# program and vmaps across seeds.  ``cfg`` is the frozen NetworkConfig —
+# hashable, so callers can close over it or pass it through jit statics.
+# --------------------------------------------------------------------------
+
+# Reno is simulated for this many RTTs before the CWND window is read
+# (matches CellularNetwork.cwnd_history's default).
+_CWND_STEPS = 64
+
+# the predictor evaluates the channel at a pinned shadowing realization
+# (the host model's ``default_rng(0)``) so the same physical round can be
+# queried at two positions; a constant key is the jax equivalent
+_PINNED_CHANNEL_KEY = 0
+
+
+def true_rate_bps_jax(cfg: NetworkConfig, pos: jax.Array,
+                      key: jax.Array) -> jax.Array:
+    """Achievable rate at ``pos`` with log-normal shadowing drawn from
+    ``key`` — the pure twin of ``CellularNetwork.true_rate_bps``."""
+    bs_pos = (jnp.arange(cfg.n_bs) + 0.5) * (cfg.road_length_m / cfg.n_bs)
+    d = jnp.min(jnp.abs(pos[:, None] - bs_pos[None, :]), axis=1)
+    d_max = cfg.road_length_m / cfg.n_bs / 2.0
+    frac = jnp.clip(1.0 - d / d_max, 0.0, 1.0)             # 1 under BS
+    log_rate = (np.log10(cfg.worst_rate_bps)
+                + frac * (np.log10(cfg.best_rate_bps)
+                          - np.log10(cfg.worst_rate_bps)))
+    shadow = jax.random.normal(key, pos.shape) * (
+        cfg.shadowing_sigma_db / 10.0)
+    return 10.0 ** (log_rate + shadow)
+
+
+def _loss_prob_jax(cfg: NetworkConfig, rate_bps: jax.Array) -> jax.Array:
+    frac = (jnp.log10(rate_bps) - np.log10(cfg.worst_rate_bps)) / (
+        np.log10(cfg.best_rate_bps) - np.log10(cfg.worst_rate_bps))
+    return jnp.clip(0.08 * (1.0 - frac) + 0.002, 0.002, 0.2)
+
+
+def cwnd_history_jax(cfg: NetworkConfig, pos: jax.Array, key: jax.Array,
+                     steps: int = _CWND_STEPS) -> jax.Array:
+    """Reno AIMD for ``steps`` RTTs -> (N, cwnd_history) recent windows."""
+    rate = true_rate_bps_jax(cfg, pos,
+                             jax.random.PRNGKey(_PINNED_CHANNEL_KEY))
+    p_loss = _loss_prob_jax(cfg, rate)
+    bdp = rate * cfg.rtt_s / (8.0 * cfg.packet_bytes)
+
+    def step(cwnd, k):
+        loss = jax.random.uniform(k, pos.shape) < p_loss
+        cwnd = jnp.where(loss, jnp.maximum(cwnd / 2.0, 1.0), cwnd + 1.0)
+        cwnd = jnp.minimum(cwnd, jnp.maximum(bdp, 1.0))    # rate-limited
+        return cwnd, cwnd
+
+    _, hist = jax.lax.scan(step, jnp.ones(pos.shape),
+                           jax.random.split(key, steps), unroll=8)
+    return hist[-cfg.cwnd_history:].T
+
+
+def predicted_throughput_jax(cfg: NetworkConfig, pos: jax.Array,
+                             key: jax.Array) -> jax.Array:
+    """CWND-average predictor (paper §5.1) in bps-equivalent units."""
+    h = cwnd_history_jax(cfg, pos, key)
+    return h.mean(axis=1) * 8.0 * cfg.packet_bytes / cfg.rtt_s
+
+
+def upload_time_s_jax(cfg: NetworkConfig, pos: jax.Array,
+                      payload_bytes: float, key: jax.Array,
+                      latency_s: float = 0.2) -> jax.Array:
+    return payload_bytes * 8.0 / true_rate_bps_jax(cfg, pos, key) + latency_s

@@ -1,0 +1,302 @@
+"""Pure staged round pipeline (paper Alg. 1 steps 1-7 as data flow).
+
+``FLSimulation.run_round`` used to be host-driven: mobility, features,
+fuzzy evaluation, selection and the Eq. 6 deadline mask each round-trip
+through numpy, so nothing above the per-group trainer could be vmapped
+over seeds or sharded over devices.  This module splits the round into
+**pure stage functions** with explicit state-in/state-out signatures:
+
+    positions(statics, cfg, t)                    -> (N,) road positions
+    features(statics, cfg, params, t, net_key)    -> (pos, raw (N, 4))
+    evaluate(statics, feats_raw)                  -> (N,) fuzzy evals
+    select(cfg, pos, evals, sel_key)              -> (N,) int32 mask
+    deadline_filter(statics, cfg, pos, mask, key) -> (survivors, n_straggler)
+    train_groups(...) / aggregate(...)            -> new global params
+
+The probe -> evaluate -> select -> deadline prefix is jax-traceable end
+to end and compiles as ONE jitted function (``selection_prefix``) with
+no host round-trips; survivor indices cross to the host exactly once, at
+the cohort gather in ``train_groups``.  ``selection_prefix_seeds`` vmaps
+the same prefix across a stacked seed axis — the multi-seed sweep
+harness (``repro.launch.sweep``) evaluates S seeds' selection stages in
+a single dispatch.
+
+Pipeline state is split by trace role:
+
+- ``RoundStatics``: a pytree of arrays that never change across rounds
+  (mobility constants, slowdowns, the packed Eq. 7 probe tensors, the
+  fuzzy membership parameters).  Leaves, so a leading seed axis can be
+  stacked on for ``vmap``.
+- ``StageConfig``: a frozen (hashable) dataclass of scalars — scheme,
+  selection/timing/network parameters — passed as a jit-static.
+- per-round inputs: the round index and base PRNG keys (folded per
+  round *inside* the trace, so the prefix is deterministic in
+  ``(statics, params, rnd, keys)`` and re-runnable for any round).
+
+Randomness: the stateful numpy generators of ``CellularNetwork`` are
+replaced by explicit jax keys — the Reno CWND predictor and the upload
+shadowing each draw from ``fold_in(net_key, rnd)``, and the predictor's
+pinned channel realization (``default_rng(0)`` in the host model) maps
+to a constant key.  Eq. 8 normalization happens inside the fuzzy kernel
+(``kops.fuzzy_eval(..., normalize=True)``), so ``features`` emits *raw*
+columns [|D_i|, TA bps, 1/C_i, LF].
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rules import build_rule_table
+from repro.core.selection import (ccs_fuzzy_select, ccs_random_select,
+                                  dcs_select, selection_stats)
+from repro.fl.aggregation import fedavg_masked
+from repro.fl.client import dataset_loss_packed, local_train_batch
+from repro.fl.mobility import positions_jax
+from repro.fl.network import (NetworkConfig, predicted_throughput_jax,
+                              upload_time_s_jax)
+from repro.fl.partition import ClientGroup
+from repro.fl.timing import (TimingConfig, completes_before_deadline,
+                             training_time_s)
+from repro.kernels import ops as kops
+
+Params = Any
+
+
+# --------------------------------------------------------------------------
+# pipeline state
+# --------------------------------------------------------------------------
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("x0", "speeds", "jitter_phase", "slowdown", "n_valid",
+                 "probe_images", "probe_labels", "probe_seg", "probe_counts",
+                 "means", "sigmas", "level_centers"),
+    meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class RoundStatics:
+    """Arrays that never change across rounds — the pure stages' closed-
+    over world state, kept explicit so it can be stacked and vmapped."""
+    # freeway mobility constants (fl/mobility.py)
+    x0: jax.Array                 # (N,)
+    speeds: jax.Array             # (N,)
+    jitter_phase: jax.Array       # (N,)
+    # per-client heterogeneity
+    slowdown: jax.Array           # (N,) C_i >= 1
+    n_valid: jax.Array            # (N,) float32 |D_i|
+    # packed Eq. 7 probe (every client's valid probe samples, flat)
+    probe_images: jax.Array       # (S, 28, 28, 1)
+    probe_labels: jax.Array       # (S,)
+    probe_seg: jax.Array          # (S,) client id per sample (N = padding)
+    probe_counts: jax.Array       # (N,) samples per client
+    # fuzzy evaluator membership parameters (core/fuzzy.py)
+    means: jax.Array              # (4, 3)
+    sigmas: jax.Array             # (4, 3)
+    level_centers: jax.Array      # (9,)
+
+
+@dataclasses.dataclass(frozen=True)
+class StageConfig:
+    """Hashable scalar configuration — one jit-static for the prefix."""
+    scheme: str                   # dcs | ccs-fuzzy | random
+    n_clients: int
+    comm_range_m: float
+    top_m: int
+    e_tau: float
+    n_clients_central: int
+    model_bytes: float
+    road_length_m: float
+    speed_jitter: float
+    timing: TimingConfig          # frozen: epochs/batch/B_exe/deadline
+    network: NetworkConfig        # frozen: rates/shadowing/Reno params
+    probe_batch: int = 128
+
+
+@functools.lru_cache(maxsize=None)
+def _rules() -> Tuple[np.ndarray, np.ndarray]:
+    """The 81-rule base as host constants (static for the Pallas path)."""
+    return build_rule_table()
+
+
+# --------------------------------------------------------------------------
+# stages (pure: explicit state in, arrays out)
+# --------------------------------------------------------------------------
+
+def positions(st: RoundStatics, cfg: StageConfig, t_s: jax.Array) -> jax.Array:
+    """Mobility stage: wrapped freeway positions at time ``t_s``."""
+    return positions_jax(st.x0, st.speeds, st.jitter_phase, t_s,
+                         road_length_m=cfg.road_length_m,
+                         speed_jitter=cfg.speed_jitter)
+
+
+def features(st: RoundStatics, cfg: StageConfig, params: Params,
+             t_s: jax.Array, net_key: jax.Array
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Probe stage (Alg. 1 steps 1-2): raw multi-objective features.
+
+    Returns ``(pos (N,), feats (N, 4))`` with *raw* columns
+    [SQ=|D_i|, TA=predicted bps, CC=1/C_i, LF=Eq. 7 loss] — Eq. 8
+    per-column max-scaling is folded into the ``evaluate`` stage's
+    kernel, so no normalization happens here."""
+    pos = positions(st, cfg, t_s)
+    sq_raw = st.n_valid
+    ta_raw = predicted_throughput_jax(cfg.network, pos, net_key)
+    cc_raw = 1.0 / st.slowdown
+    lf_raw = dataset_loss_packed(params, st.probe_images, st.probe_labels,
+                                 st.probe_seg, st.probe_counts,
+                                 n_clients=cfg.n_clients,
+                                 batch=cfg.probe_batch)
+    feats = jnp.stack([sq_raw, ta_raw, cc_raw, lf_raw],
+                      axis=1).astype(jnp.float32)
+    return pos, feats
+
+
+def evaluate(st: RoundStatics, feats_raw: jax.Array) -> jax.Array:
+    """Fuzzy evaluation stage (paper §5): raw (N, 4) -> (N,) on [0, 100].
+    Eq. 8 normalization runs inside the kernel (``normalize=True``)."""
+    table, levels = _rules()
+    return kops.fuzzy_eval(feats_raw, st.means, st.sigmas, table, levels,
+                           st.level_centers, normalize=True)
+
+
+def select(cfg: StageConfig, pos: jax.Array, evals: jax.Array,
+           sel_key: jax.Array) -> jax.Array:
+    """Selection stage (Alg. 1 step 4) -> int32 mask (N,)."""
+    if cfg.scheme == "dcs":
+        return dcs_select(pos, evals, comm_range=cfg.comm_range_m,
+                          top_m=cfg.top_m, e_tau=cfg.e_tau)
+    if cfg.scheme == "ccs-fuzzy":
+        return ccs_fuzzy_select(evals, cfg.n_clients_central)
+    if cfg.scheme == "random":
+        return ccs_random_select(sel_key, cfg.n_clients,
+                                 cfg.n_clients_central)
+    raise ValueError(cfg.scheme)
+
+
+def deadline_filter(st: RoundStatics, cfg: StageConfig, pos: jax.Array,
+                    mask: jax.Array, upload_key: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Eq. 6 straggler stage: ``(survivors (N,) bool, n_straggler)``."""
+    train_t = training_time_s(cfg.timing, st.slowdown, st.n_valid)
+    upload_t = upload_time_s_jax(cfg.network, pos, cfg.model_bytes,
+                                 upload_key)
+    ok = completes_before_deadline(cfg.timing, train_t, upload_t)
+    selected = mask > 0
+    return selected & ok, (selected & ~ok).sum()
+
+
+def _prefix(st: RoundStatics, params: Params, rnd: jax.Array,
+            sel_key: jax.Array, net_key: jax.Array, *,
+            cfg: StageConfig) -> Dict[str, jax.Array]:
+    """Unjitted prefix body (also the vmap target)."""
+    t_s = rnd.astype(jnp.float32) * cfg.timing.deadline_s
+    k_sel = jax.random.fold_in(sel_key, rnd)
+    k_pred, k_upload = jax.random.split(jax.random.fold_in(net_key, rnd))
+    pos, feats = features(st, cfg, params, t_s, k_pred)
+    evals = evaluate(st, feats)
+    mask = select(cfg, pos, evals, k_sel)
+    survivors, n_straggler = deadline_filter(st, cfg, pos, mask, k_upload)
+    stats = selection_stats(mask, evals)
+    return {"pos": pos, "feats": feats, "evals": evals, "mask": mask,
+            "survivors": survivors, "n_straggler": n_straggler,
+            "n_selected": stats["n_selected"],
+            "n_survivor": survivors.sum(),
+            "mean_eval_selected": stats["mean_eval_selected"]}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def selection_prefix(st: RoundStatics, params: Params, rnd: jax.Array,
+                     sel_key: jax.Array, net_key: jax.Array, *,
+                     cfg: StageConfig) -> Dict[str, jax.Array]:
+    """The probe -> evaluate -> select -> deadline prefix as ONE compiled
+    function: no host round-trips between stages.  ``rnd`` is a traced
+    int32 scalar, so every round shares a single executable."""
+    return _prefix(st, params, rnd, sel_key, net_key, cfg=cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def selection_prefix_seeds(st: RoundStatics, params: Params,
+                           rnd: jax.Array, sel_keys: jax.Array,
+                           net_keys: jax.Array, *,
+                           cfg: StageConfig) -> Dict[str, jax.Array]:
+    """The prefix vmapped across a leading seed axis.
+
+    ``st``/``params`` carry stacked ``(S, ...)`` leaves (one slice per
+    seed — same shapes, different data/partitions), ``sel_keys``/
+    ``net_keys`` are ``(S,)``-leading key arrays.  One dispatch evaluates
+    all S seeds' selection stages for round ``rnd``."""
+    return jax.vmap(
+        lambda s, p, ks, kn: _prefix(s, p, rnd, ks, kn, cfg=cfg)
+    )(st, params, sel_keys, net_keys)
+
+
+def stack_statics(statics: Sequence[RoundStatics]) -> RoundStatics:
+    """Stack per-seed statics into one (S, ...)-leading pytree for
+    ``selection_prefix_seeds`` (shapes must match across seeds — they do
+    whenever the seeds share a partition profile)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *statics)
+
+
+# --------------------------------------------------------------------------
+# training stages (host gather -> device train -> aggregate)
+# --------------------------------------------------------------------------
+
+def cohort_bucket(k: int) -> int:
+    """Cohort tensor size for k survivors: next multiple of 2, min 2 —
+    jit compiles a handful of shapes no matter how the per-round
+    selection count fluctuates.  The floor matters for capacity groups:
+    a Table-3 big-group cohort of 1-2 must not train (and compile) 4
+    padded 4500-sample slots."""
+    return max(2, k + (k % 2))
+
+
+def train_groups(params: Params, groups: Sequence[ClientGroup],
+                 group_steps: Sequence[int], survivors: np.ndarray,
+                 keys: jax.Array, *, epochs: int, batch_size: int,
+                 lr: float, prox_mu: float
+                 ) -> Optional[Tuple[Params, jax.Array]]:
+    """Local-training stage (Eq. 1): one ``vmap(local_train)`` per
+    capacity group over that group's surviving cohort.
+
+    ``survivors`` is the single host-side crossing of the round — the
+    cohort gather needs concrete indices to slice fixed-shape stacks.
+    Returns ``(stacked models, weights)`` with padding duplicates at
+    weight zero, or ``None`` for an empty round (no-op broadcast).
+    Groups with an empty cohort are skipped — never padded from a
+    nonexistent ``cohort[0]``."""
+    if not survivors.any():
+        return None
+    stacks, weights = [], []
+    for gi, g in enumerate(groups):
+        cohort = np.where(survivors[g.client_ids])[0]       # group-local
+        k = len(cohort)
+        if k == 0:
+            continue                         # empty cohort: skip group
+        bucket = cohort_bucket(k)
+        idx = np.concatenate([cohort, np.full(bucket - k, cohort[0])])
+        stacked, _ = local_train_batch(
+            params, jnp.asarray(g.images[idx]), jnp.asarray(g.labels[idx]),
+            jnp.asarray(g.n_valid[idx]),
+            keys[jnp.asarray(g.client_ids[idx])],
+            epochs=epochs, batch_size=batch_size,
+            steps_per_epoch=group_steps[gi], lr=lr, prox_mu=prox_mu)
+        w = g.n_valid[idx].astype(np.float32)
+        w[k:] = 0.0                          # padding duplicates drop out
+        stacks.append(stacked)
+        weights.append(w)
+    merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *stacks)
+    return merged, jnp.asarray(np.concatenate(weights))
+
+
+def aggregate(params: Params,
+              trained: Optional[Tuple[Params, jax.Array]]) -> Params:
+    """FedAvg stage (Eq. 2) over the survivors; an empty round returns
+    the global model unchanged (no-op broadcast)."""
+    if trained is None:
+        return params
+    merged, weights = trained
+    return fedavg_masked(merged, weights)

@@ -42,6 +42,14 @@ Both engines draw per-client training randomness from the same
 ``E_tau``) as a no-op broadcast: the global model is unchanged, exactly.
 Per-group empty cohorts are skipped the same way — a group never pads
 from an empty cohort.
+
+Steps 1-4 and 6 (probe -> fuzzy evaluate -> select -> deadline) are the
+**staged pure pipeline** of ``fl/pipeline.py``: one jitted
+``selection_prefix`` with no host round-trips, shared by both engines —
+``FLSimulation`` is a thin stateful wrapper that holds the statics /
+PRNG bases and crosses the survivor mask to the host exactly once, at
+the cohort gather.  The sweep harness (``repro.launch.sweep``) drives
+the same prefix vmapped across seeds.
 """
 from __future__ import annotations
 
@@ -55,19 +63,19 @@ import numpy as np
 
 from repro.configs.mnist_cnn import CONFIG as CNN_CFG
 from repro.core.fuzzy import FuzzyEvaluator, FuzzyEvaluatorConfig
-from repro.core.selection import (ccs_fuzzy_select, ccs_random_select,
-                                  dcs_select)
+from repro.core.overhead import (accumulated_time_s, IoVParams,
+                                 model_upload_bytes,
+                                 state_maintenance_bytes)
 from repro.data.synthetic import make_dataset, train_test_split
-from repro.fl.aggregation import fedavg, fedavg_masked
-from repro.fl.client import (dataset_loss, dataset_loss_packed,
-                             evaluate_accuracy, local_train,
+from repro.fl import pipeline
+from repro.fl.aggregation import fedavg
+from repro.fl.client import (evaluate_accuracy, local_train,
                              local_train_batch)
 from repro.fl.mobility import FreewayMobility, MobilityConfig
-from repro.fl.network import CellularNetwork, NetworkConfig
+from repro.fl.network import NetworkConfig
 from repro.fl.partition import (PartitionConfig, partition, stack_clients,
                                 steps_per_epoch)
-from repro.fl.timing import TimingConfig, completes_before_deadline, \
-    training_time_s
+from repro.fl.timing import TimingConfig
 from repro.models.cnn import init_cnn
 
 ENGINES = ("batched", "loop")
@@ -133,19 +141,19 @@ class FLSimulation:
             self.n_valid[g.client_ids] = g.n_valid
             self._slot[g.client_ids, 0] = gi
             self._slot[g.client_ids, 1] = np.arange(g.size)
-        # each engine keeps only the copy it reads, the dataset is the
-        # memory bill: host arrays back the batched engine's cohort
-        # gather + probe packing, device arrays feed the loop engine
-        if cfg.engine == "batched":
-            self._build_packed_probe()
-        else:
+        # the packed Eq. 7 probe feeds the staged selection prefix in
+        # BOTH engines (it is the pipeline's loss-feature input)
+        self._build_packed_probe()
+        # the full dataset is the memory bill, and each engine keeps only
+        # the copy it reads: host arrays back the batched engine's cohort
+        # gather, device arrays feed the loop engine's per-client calls
+        if cfg.engine != "batched":
             self.groups = [dataclasses.replace(g,
                                                images=jnp.asarray(g.images),
                                                labels=jnp.asarray(g.labels))
                            for g in self.groups]
 
         self.slowdown = rng.uniform(*cfg.slowdown_range, self.n)
-        self.network = CellularNetwork(cfg.network)
         # quality proxy for the 'extreme' placement: big data + fast compute
         quality = (self.n_valid / self.n_valid.max()
                    + 1.0 / self.slowdown)
@@ -156,7 +164,49 @@ class FLSimulation:
         self.params = init_cnn(jax.random.PRNGKey(cfg.seed), CNN_CFG)
         self.key = jax.random.PRNGKey(cfg.seed + 1)       # selection draws
         self.train_key = jax.random.PRNGKey(cfg.seed + 2)  # fold_in schedule
+        # network randomness base (replaces the stateful numpy generator
+        # inside the staged prefix; folded per round, split per use).
+        # Folding in the simulation seed keeps NetworkConfig — a
+        # jit-static — shareable across a sweep's seed axis while every
+        # seed still sees its own channel realizations.
+        self.net_key = jax.random.fold_in(
+            jax.random.PRNGKey(cfg.network.seed + 53), cfg.seed)
         self.last_mask: Optional[np.ndarray] = None        # set per round
+        self.statics = self._build_statics()
+        self.stage_cfg = self._build_stage_cfg()
+
+    # -- staged-pipeline state -----------------------------------------
+    def _build_statics(self) -> pipeline.RoundStatics:
+        """The arrays the pure stages read — fixed for the simulation's
+        lifetime (the partition, placement and hardware mix are static)."""
+        f32 = jnp.float32
+        ecfg = self.evaluator.cfg
+        return pipeline.RoundStatics(
+            x0=jnp.asarray(self.mobility.x0, f32),
+            speeds=jnp.asarray(self.mobility.speeds, f32),
+            jitter_phase=jnp.asarray(self.mobility._jitter_phase, f32),
+            slowdown=jnp.asarray(self.slowdown, f32),
+            n_valid=jnp.asarray(self.n_valid, f32),
+            probe_images=self._probe_images,
+            probe_labels=self._probe_labels,
+            probe_seg=self._probe_seg,
+            probe_counts=self._probe_counts,
+            means=jnp.asarray(ecfg.means, f32),
+            sigmas=jnp.asarray(ecfg.sigmas, f32),
+            level_centers=jnp.asarray(self.evaluator.level_centers, f32))
+
+    def _build_stage_cfg(self) -> pipeline.StageConfig:
+        cfg = self.cfg
+        return pipeline.StageConfig(
+            scheme=cfg.scheme, n_clients=self.n,
+            comm_range_m=cfg.comm_range_m, top_m=cfg.top_m,
+            e_tau=cfg.e_tau, n_clients_central=cfg.n_clients_central,
+            model_bytes=cfg.model_bytes,
+            road_length_m=cfg.mobility.road_length_m,
+            speed_jitter=cfg.mobility.speed_jitter,
+            timing=TimingConfig(cfg.local_epochs, cfg.batch_size,
+                                deadline_s=cfg.deadline_s),
+            network=cfg.network, probe_batch=self._PROBE_BATCH)
 
     # ------------------------------------------------------------------
     _PROBE_BATCH = 128
@@ -200,62 +250,58 @@ class FLSimulation:
         return jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
             rk, jnp.arange(self.n))
 
-    def _features(self, pos: np.ndarray) -> np.ndarray:
-        cfg = self.cfg
-        sq = self.n_valid / max(self.n_valid.max(), 1)
-        ta_raw = self.network.predicted_throughput(pos)
-        ta = ta_raw / max(ta_raw.max(), 1e-9)
-        cc_raw = 1.0 / self.slowdown
-        cc = cc_raw / cc_raw.max()
-        probe = min(cfg.probe_samples, self.cap)
-        if cfg.engine == "batched":
-            lf_raw = np.asarray(dataset_loss_packed(
-                self.params, self._probe_images, self._probe_labels,
-                self._probe_seg, self._probe_counts, n_clients=self.n,
-                batch=self._PROBE_BATCH))
-        else:
-            lf_raw = np.empty(self.n)
-            for i in range(self.n):
-                gi, li = self._slot[i]
-                g = self.groups[gi]
-                p = min(probe, g.cap)
-                lf_raw[i] = float(dataset_loss(
-                    self.params, g.images[li, :p], g.labels[li, :p],
-                    jnp.int32(min(int(self.n_valid[i]), p)), batch=128))
-        lf = lf_raw / max(lf_raw.max(), 1e-9)
-        return np.stack([sq, ta, cc, lf], axis=1).astype(np.float32)
+    def selection_state(self, rnd: int) -> Dict[str, jax.Array]:
+        """Run the staged selection prefix (probe -> evaluate -> select ->
+        deadline) for round ``rnd`` as one jitted call.  Deterministic in
+        ``(params, rnd)``: the same round can be queried repeatedly.
 
-    def _select(self, pos: np.ndarray, evals: jnp.ndarray) -> np.ndarray:
-        cfg = self.cfg
-        if cfg.scheme == "dcs":
-            mask = dcs_select(jnp.asarray(pos), evals,
-                              comm_range=cfg.comm_range_m, top_m=cfg.top_m,
-                              e_tau=cfg.e_tau)
-        elif cfg.scheme == "ccs-fuzzy":
-            mask = ccs_fuzzy_select(evals, cfg.n_clients_central)
-        elif cfg.scheme == "random":
-            self.key, sub = jax.random.split(self.key)
-            mask = ccs_random_select(sub, self.n, cfg.n_clients_central)
-        else:
-            raise ValueError(cfg.scheme)
-        return np.asarray(mask)
+        The evaluator's membership parameters are re-read every call, so
+        a post-construction ``FuzzyEvaluator.calibrate()`` takes effect
+        on the next round exactly as in the host-driven engine.  (The
+        sweep's vmapped path stacks statics once up front and therefore
+        pins calibration at stacking time.)"""
+        ecfg = self.evaluator.cfg
+        st = dataclasses.replace(
+            self.statics,
+            means=jnp.asarray(ecfg.means, jnp.float32),
+            sigmas=jnp.asarray(ecfg.sigmas, jnp.float32))
+        return pipeline.selection_prefix(
+            st, self.params, jnp.int32(rnd), self.key,
+            self.net_key, cfg=self.stage_cfg)
+
+    # the accumulated_time_s scheme key for each simulator scheme: the
+    # random baseline maintains classical full state (CFL), the others
+    # exchange evaluations (cloud vs DSRC)
+    _OVERHEAD_SCHEME = {"dcs": "dcs", "ccs-fuzzy": "ccs-fuzzy",
+                        "random": "cfl"}
 
     def _comm_accounting(self, n_selected: int) -> Dict[str, float]:
-        """Per-round communication (bytes and time) per §4.2 / Fig. 9."""
+        """Per-round communication (bytes and time) per §4.2 / Fig. 9,
+        routed through ``core/overhead.py`` so the simulator and the
+        Fig. 2 / Fig. 9 analytics report consistent numbers — including
+        the DUPLEX_FACTOR on state traffic and the IoVParams per-message
+        latencies (cloud vs DSRC)."""
         cfg = self.cfg
-        msgs = self.n * cfg.deadline_s / cfg.state_interval_s
-        up_bytes = n_selected * cfg.model_bytes
-        if cfg.scheme in ("ccs-fuzzy",):
-            state_b = msgs * cfg.eval_bytes
-            state_t = msgs * 0.2
-        elif cfg.scheme == "random":
-            state_b = msgs * cfg.state_bytes
-            state_t = msgs * 0.2
-        else:                                   # dcs: DSRC evaluations only
-            state_b = msgs * cfg.eval_bytes
-            state_t = msgs * 0.04
-        return {"state_bytes": state_b, "upload_bytes": up_bytes,
-                "state_time_s": state_t}
+        state_bytes = (cfg.state_bytes if cfg.scheme == "random"
+                       else cfg.eval_bytes)
+        p = IoVParams(n_participants=self.n, clients_per_round=n_selected,
+                      round_period_s=cfg.deadline_s,
+                      model_bytes=cfg.model_bytes,
+                      state_bytes_cfl=cfg.state_bytes,
+                      state_bytes_ccs_fuzzy=cfg.eval_bytes,
+                      eval_bytes_dcs=cfg.eval_bytes,
+                      uplink_bps_best=cfg.network.best_rate_bps,
+                      uplink_bps_worst=cfg.network.worst_rate_bps)
+        key = self._OVERHEAD_SCHEME[cfg.scheme]
+        comm_t = accumulated_time_s(key, cfg.state_interval_s, p)
+        upload_t = accumulated_time_s("model-only", cfg.state_interval_s, p)
+        return {"state_bytes": state_maintenance_bytes(
+                    self.n, state_bytes, cfg.deadline_s,
+                    cfg.state_interval_s),
+                "upload_bytes": model_upload_bytes(n_selected,
+                                                   cfg.model_bytes),
+                "state_time_s": comm_t - upload_t,
+                "comm_time_s": comm_t}
 
     # -- local training + aggregation (steps 5-7) ----------------------
     def _train_loop(self, survivors: np.ndarray,
@@ -280,14 +326,8 @@ class FLSimulation:
         if new_models:                           # Eq. 2
             self.params = fedavg(new_models, weights)
 
-    @staticmethod
-    def _bucket(k: int) -> int:
-        """Cohort tensor size for k survivors: next multiple of 2, min 2 —
-        jit compiles a handful of shapes no matter how the per-round
-        selection count fluctuates.  The floor matters for capacity
-        groups: a Table-3 big-group cohort of 1-2 must not train (and
-        compile) 4 padded 4500-sample slots."""
-        return max(2, k + (k % 2))
+    # cohort bucketing lives with the staged training stage now
+    _bucket = staticmethod(pipeline.cohort_bucket)
 
     def warmup(self, buckets=None) -> None:
         """Pre-compile the batched trainer for the given cohort bucket
@@ -318,61 +358,37 @@ class FLSimulation:
 
     def _train_batched(self, survivors: np.ndarray,
                        keys: jax.Array) -> None:
-        """One vmap(local_train) per capacity group over that group's
-        surviving cohort; the mask enters Eq. 2 only through the FedAvg
-        weights — cohort padding rows train like everyone else and
-        aggregate at weight zero.  Stragglers are dropped at the gather
-        (their update is discarded either way; at IoV scale their local
-        SGD FLOPs are not).  Groups with an empty cohort are skipped —
-        never padded from a nonexistent ``cohort[0]`` — and a fully empty
-        round leaves the global model untouched (no-op broadcast)."""
+        """The staged ``train_groups`` + ``aggregate`` stages: one
+        vmap(local_train) per capacity group over that group's surviving
+        cohort, the mask folded into the FedAvg weights (Eq. 2).
+        Stragglers are dropped at the gather (their update is discarded
+        either way; at IoV scale their local SGD FLOPs are not).  An
+        empty round (or per-group cohort) is a no-op broadcast."""
         cfg = self.cfg
-        if not survivors.any():
-            return                               # empty round: no-op
-        stacks, weights = [], []
-        for gi, g in enumerate(self.groups):
-            cohort = np.where(survivors[g.client_ids])[0]  # group-local
-            k = len(cohort)
-            if k == 0:
-                continue                         # empty cohort: skip group
-            bucket = self._bucket(k)
-            idx = np.concatenate([cohort, np.full(bucket - k, cohort[0])])
-            stacked, _ = local_train_batch(
-                self.params, jnp.asarray(g.images[idx]),
-                jnp.asarray(g.labels[idx]), jnp.asarray(g.n_valid[idx]),
-                keys[jnp.asarray(g.client_ids[idx])],
-                epochs=cfg.local_epochs, batch_size=cfg.batch_size,
-                steps_per_epoch=self._group_steps[gi], lr=cfg.lr,
-                prox_mu=cfg.prox_mu)
-            w = g.n_valid[idx].astype(np.float32)
-            w[k:] = 0.0                          # padding duplicates drop out
-            stacks.append(stacked)
-            weights.append(w)
-        merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
-                              *stacks)
-        self.params = fedavg_masked(
-            merged, jnp.asarray(np.concatenate(weights)))  # Eq. 2
+        trained = pipeline.train_groups(
+            self.params, self.groups, self._group_steps, survivors, keys,
+            epochs=cfg.local_epochs, batch_size=cfg.batch_size, lr=cfg.lr,
+            prox_mu=cfg.prox_mu)
+        self.params = pipeline.aggregate(self.params, trained)
 
     # ------------------------------------------------------------------
     def run_round(self, rnd: int) -> Dict[str, float]:
-        cfg = self.cfg
-        t = rnd * cfg.deadline_s
-        pos = self.mobility.positions(t)
-        feats = self._features(pos)
-        evals = self.evaluator.evaluate(jnp.asarray(feats))
-        mask = self._select(pos, evals)
-        self.last_mask = mask
-        sel = np.where(mask > 0)[0]
+        """One federated round: the jitted staged prefix (steps 1-4 + 6),
+        then the engine's training/aggregation (steps 5 + 7)."""
+        return self.finish_round(rnd, self.selection_state(rnd))
 
-        # deadline filter (Eq. 6)
-        tcfg = TimingConfig(cfg.local_epochs, cfg.batch_size,
-                            deadline_s=cfg.deadline_s)
-        train_t = training_time_s(tcfg, self.slowdown, self.n_valid)
-        upload_t = self.network.upload_time_s(pos, cfg.model_bytes)
-        ok = completes_before_deadline(tcfg, train_t, upload_t)
-        selected = mask > 0
-        survivors = selected & ok
-        n_straggler = int((selected & ~ok).sum())
+    def finish_round(self, rnd: int,
+                     state: Dict[str, jax.Array]) -> Dict[str, float]:
+        """Complete round ``rnd`` from a selection-prefix output (which
+        may come from a seed-vmapped sweep dispatch).  This is the single
+        device->host crossing of the round — the survivor mask becomes
+        concrete here, at the cohort gather."""
+        cfg = self.cfg
+        host = jax.device_get(state)
+        mask = np.asarray(host["mask"])
+        survivors = np.asarray(host["survivors"])
+        self.last_mask = mask
+        n_selected = int(host["n_selected"])
 
         # local training (Eq. 1) + aggregation (Eq. 2)
         keys = self._round_keys(rnd)
@@ -383,12 +399,11 @@ class FLSimulation:
 
         acc = evaluate_accuracy(self.params, self.test_images,
                                 self.test_labels, batch=256)
-        row = {"round": rnd, "accuracy": acc, "n_selected": len(sel),
+        row = {"round": rnd, "accuracy": acc, "n_selected": n_selected,
                "n_aggregated": int(survivors.sum()),
-               "n_straggler": n_straggler,
-               "mean_eval_selected": float(
-                   evals[sel].mean()) if len(sel) else 0.0}
-        row.update(self._comm_accounting(len(sel)))
+               "n_straggler": int(host["n_straggler"]),
+               "mean_eval_selected": float(host["mean_eval_selected"])}
+        row.update(self._comm_accounting(n_selected))
         return row
 
     def run(self, n_rounds: Optional[int] = None) -> List[Dict[str, float]]:

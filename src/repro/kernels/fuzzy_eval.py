@@ -27,12 +27,14 @@ NUM_LEVELS = 3       # per-variable linguistic levels (low / mid / high)
 NUM_OUT = 9          # L0..L8
 
 
-def _kernel(x_ref, means_ref, sigmas_ref, centers_ref, o_ref, *,
-            rule_table: tuple, rule_levels: tuple):
+def _kernel(x_ref, inv_max_ref, means_ref, sigmas_ref, centers_ref, o_ref, *,
+            rule_table: tuple, rule_levels: tuple, normalize: bool):
     x = x_ref[...]                                   # (V, P)
     means = means_ref[...]                           # (V, L)
     sigmas = sigmas_ref[...]
     centers = centers_ref[...]                       # (1, NUM_OUT)
+    if normalize:                                    # Eq. 8 in-kernel
+        x = jnp.clip(x * inv_max_ref[...], 0.0, 1.0)
 
     # memberships mu[v][l]: (P,)
     mu = []
@@ -65,9 +67,14 @@ def _kernel(x_ref, means_ref, sigmas_ref, centers_ref, o_ref, *,
 
 def fuzzy_eval_pallas(x: jax.Array, means: jax.Array, sigmas: jax.Array,
                       rule_table: np.ndarray, rule_levels: np.ndarray,
-                      level_centers: jax.Array,
-                      interpret: bool = True) -> jax.Array:
+                      level_centers: jax.Array, interpret: bool = True,
+                      normalize: bool = False) -> jax.Array:
     """x: (P, V) in [0,1] -> evaluations (P,).
+
+    ``normalize=True`` accepts *raw* feature columns and applies Eq. 8
+    per-column max-scaling inside the kernel (the global column maxima
+    are a cheap jnp prepass over the un-padded input; the padded rows
+    are zeros, so they cannot raise a maximum).
 
     rule_table (R,V) / rule_levels (R,) are host-side numpy constants —
     they are baked into the kernel as static unrolled rules.
@@ -77,14 +84,18 @@ def fuzzy_eval_pallas(x: jax.Array, means: jax.Array, sigmas: jax.Array,
     pad = (-p) % BLOCK_P
     xp = jnp.pad(x, ((0, pad), (0, 0))).T.astype(jnp.float32)   # (V, P')
     pp = p + pad
+    inv_max = (1.0 / jnp.maximum(x.max(axis=0), 1e-9) if normalize
+               else jnp.ones((v,))).astype(jnp.float32)[:, None]
     table = tuple(tuple(int(i) for i in row) for row in np.asarray(rule_table))
     levels = tuple(int(l) for l in np.asarray(rule_levels))
 
     out = pl.pallas_call(
-        functools.partial(_kernel, rule_table=table, rule_levels=levels),
+        functools.partial(_kernel, rule_table=table, rule_levels=levels,
+                          normalize=normalize),
         grid=(pp // BLOCK_P,),
         in_specs=[
             pl.BlockSpec((NUM_VARS, BLOCK_P), lambda i: (0, i)),
+            pl.BlockSpec((NUM_VARS, 1), lambda i: (0, 0)),
             pl.BlockSpec((NUM_VARS, NUM_LEVELS), lambda i: (0, 0)),
             pl.BlockSpec((NUM_VARS, NUM_LEVELS), lambda i: (0, 0)),
             pl.BlockSpec((1, NUM_OUT), lambda i: (0, 0)),
@@ -92,6 +103,6 @@ def fuzzy_eval_pallas(x: jax.Array, means: jax.Array, sigmas: jax.Array,
         out_specs=pl.BlockSpec((1, BLOCK_P), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, pp), jnp.float32),
         interpret=interpret,
-    )(xp, means.astype(jnp.float32), sigmas.astype(jnp.float32),
+    )(xp, inv_max, means.astype(jnp.float32), sigmas.astype(jnp.float32),
       level_centers.astype(jnp.float32)[None, :])
     return out[0, :p]

@@ -52,14 +52,19 @@ def wkv6(r, k, v, w, u, s0, impl: Optional[str] = None
 
 def fuzzy_eval(x, means, sigmas, rule_table: np.ndarray,
                rule_levels: np.ndarray, level_centers,
-               impl: Optional[str] = None) -> jax.Array:
+               impl: Optional[str] = None,
+               normalize: bool = False) -> jax.Array:
+    """``normalize=True`` accepts raw feature columns and applies Eq. 8
+    per-column max-scaling inside the kernel (both impls) — the staged
+    ``evaluate`` stage feeds raw [SQ, TA, CC, LF]."""
     m = _impl(impl)
     if m == "pallas":
         from repro.kernels.fuzzy_eval import fuzzy_eval_pallas
         return fuzzy_eval_pallas(x, means, sigmas, rule_table, rule_levels,
-                                 level_centers, interpret=_interpret())
+                                 level_centers, interpret=_interpret(),
+                                 normalize=normalize)
     return kref.fuzzy_eval_ref(x, means, sigmas, rule_table, rule_levels,
-                               level_centers)
+                               level_centers, normalize=normalize)
 
 
 # --------------------------------------------------------------------------

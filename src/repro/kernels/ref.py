@@ -53,17 +53,23 @@ def gaussian_membership(x: jax.Array, means: jax.Array,
 
 def fuzzy_eval_ref(x: jax.Array, means: jax.Array, sigmas: jax.Array,
                    rule_table: np.ndarray, rule_levels: np.ndarray,
-                   level_centers: jax.Array) -> jax.Array:
+                   level_centers: jax.Array,
+                   normalize: bool = False) -> jax.Array:
     """Mamdani inference with min-conjunction, max-aggregation per output
     level, COG over singleton level centers.
 
-    x: (P, V) normalized inputs in [0,1];
+    x: (P, V) normalized inputs in [0,1] — or raw features when
+    ``normalize=True``, which applies Eq. 8 per-column max-scaling
+    (x / max(column), clipped to [0, 1]) before inference;
     means/sigmas: (V, 3) Gaussian membership params;
     rule_table: (R, V) int, linguistic index per variable per rule;
     rule_levels: (R,) int in [0, 9), consequent level per rule;
     level_centers: (9,) COG singleton positions.
     Returns evaluations (P,) in [0, 1]-ish (scale of level_centers).
     """
+    if normalize:                                            # Eq. 8
+        maxima = jnp.maximum(x.max(axis=0), 1e-9)
+        x = jnp.clip(x / maxima, 0.0, 1.0)
     mu = gaussian_membership(x, means, sigmas)               # (P, V, 3)
     p, v, _ = mu.shape
     rt = jnp.asarray(rule_table)                             # (R, V)

@@ -1,0 +1,296 @@
+"""Sharded multi-seed sweep over (scheme x classes-per-client x
+distribution) — the paper's Figs. 6-9 evaluation grid with error bars.
+
+  PYTHONPATH=src python -m repro.launch.sweep --fast --seeds 2
+  PYTHONPATH=src python -m repro.launch.sweep --fast --seeds 3 \\
+      --classes 9,6,2 --distributions uniform,extreme --out grid.csv
+
+Each **cell** is a whole (scheme, classes_per_client, distribution,
+seed) simulation.  The harness exploits the staged round pipeline
+(``fl/pipeline.py``) on two axes:
+
+- **seeds are vmapped**: all seeds of a cell group share one
+  ``StageConfig`` (the jit-static), so their selection prefixes run as a
+  single ``selection_prefix_seeds`` dispatch per round — one compiled
+  program evaluates S seeds' probe/evaluate/select/deadline stages at
+  once.  Training still runs per seed (cohorts differ), through the same
+  ``FLSimulation.finish_round`` the single-seed driver uses.
+- **cell groups are distributed**: groups are placed round-robin over
+  ``repro.sharding.api.sweep_devices()`` (the active mesh's devices, or
+  all local devices) via ``jax.default_device`` — this spreads *memory*
+  (each group's datasets and jit executables live on its device) but
+  the in-process loop is synchronous, so wall-clock parallelism comes
+  from worker *processes* (``--workers N``, spawn-based).  On a single
+  CPU device with one worker this degrades to serial execution — the
+  correctness baseline.
+
+Output: ONE tidy CSV, one row per (cell, round), with per-seed metrics
+plus mean +/- std columns aggregated across the group's seeds (constant
+within a (round, scheme, classes, distribution) group) — directly
+plottable as the error-bar curves of Figs. 6-8.  Byte/time columns come
+from the ``core/overhead.py``-reconciled accounting (Fig. 9).  Rows are
+emitted in a deterministic order and with fixed float formatting, so a
+repeated sweep is bitwise identical (tests/test_sweep.py).
+"""
+from __future__ import annotations
+
+import argparse
+import io
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl import pipeline
+from repro.fl.mobility import MobilityConfig
+from repro.fl.partition import PartitionConfig
+from repro.fl.rounds import FLSimConfig, FLSimulation
+from repro.sharding.api import sweep_devices
+
+SCHEMES = ("dcs", "ccs-fuzzy", "random")
+
+# one row per (cell, round): cell identity + per-seed metrics + the
+# across-seed aggregates (constant within a seed group)
+CSV_COLUMNS = (
+    "round", "scheme", "seed", "classes_per_client", "distribution",
+    "accuracy", "n_selected", "n_aggregated", "n_straggler",
+    "mean_eval_selected", "state_bytes", "upload_bytes", "state_time_s",
+    "comm_time_s",
+    "accuracy_mean", "accuracy_std", "n_selected_mean", "n_selected_std",
+    "n_straggler_mean", "n_straggler_std",
+)
+
+_FMT = {"accuracy": "{:.6f}", "mean_eval_selected": "{:.4f}",
+        "state_bytes": "{:.6g}", "upload_bytes": "{:.6g}",
+        "state_time_s": "{:.6g}", "comm_time_s": "{:.6g}",
+        "accuracy_mean": "{:.6f}", "accuracy_std": "{:.6f}",
+        "n_selected_mean": "{:.4f}", "n_selected_std": "{:.4f}",
+        "n_straggler_mean": "{:.4f}", "n_straggler_std": "{:.4f}"}
+
+# sweep cell group: every seed of one (scheme, classes, distribution)
+Group = Tuple[str, int, str]
+
+
+def fast_cell_config(scheme: str, classes_per_client: int,
+                     distribution: str, seed: int) -> FLSimConfig:
+    """CPU-budget profile per cell (mirrors launch/fl_sim.fast_config).
+
+    Fewer classes/client concentrate per-class demand under the no-dup
+    partition rule, so the source pool grows with non-iid-ness."""
+    part = PartitionConfig(big_quantity=300, small_quantity=45,
+                           classes_per_client=classes_per_client, seed=seed)
+    return FLSimConfig(
+        scheme=scheme, partition=part, local_epochs=1,
+        samples_per_class=600 + (9 - classes_per_client) * 80,
+        mobility=MobilityConfig(distribution=distribution, seed=seed),
+        seed=seed)
+
+
+def paper_cell_config(scheme: str, classes_per_client: int,
+                      distribution: str, seed: int) -> FLSimConfig:
+    """Table 3 profile (expensive on CPU)."""
+    part = PartitionConfig(classes_per_client=classes_per_client, seed=seed)
+    return FLSimConfig(
+        scheme=scheme, partition=part, local_epochs=30, deadline_s=20.0,
+        mobility=MobilityConfig(distribution=distribution, seed=seed),
+        seed=seed)
+
+
+ConfigFn = Callable[[str, int, str, int], FLSimConfig]
+
+
+def run_seed_group(scheme: str, classes_per_client: int, distribution: str,
+                   seeds: Sequence[int], rounds: int,
+                   cfg_fn: ConfigFn = fast_cell_config,
+                   vmap_prefix: bool = True) -> List[Dict]:
+    """Run every seed of one cell group for ``rounds`` rounds.
+
+    When the seeds share a ``StageConfig`` (they do by construction —
+    only arrays differ), their selection prefixes are evaluated in ONE
+    vmapped dispatch per round; per-seed training and aggregation then
+    complete each round through ``FLSimulation.finish_round``."""
+    sims = [FLSimulation(cfg_fn(scheme, classes_per_client, distribution,
+                                seed)) for seed in seeds]
+    if not sims:
+        return []
+    cfg0 = sims[0].stage_cfg
+    use_vmap = (vmap_prefix and len(sims) > 1
+                and all(s.stage_cfg == cfg0 for s in sims))
+    stacked_st = (pipeline.stack_statics([s.statics for s in sims])
+                  if use_vmap else None)
+    sel_keys = jnp.stack([s.key for s in sims])
+    net_keys = jnp.stack([s.net_key for s in sims])
+
+    rows: List[Dict] = []
+    for r in range(rounds):
+        if use_vmap:
+            params = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                  *[s.params for s in sims])
+            outs = pipeline.selection_prefix_seeds(
+                stacked_st, params, jnp.int32(r), sel_keys, net_keys,
+                cfg=cfg0)
+            states = [jax.tree.map(lambda x, i=i: x[i], outs)
+                      for i in range(len(sims))]
+        else:
+            states = [sim.selection_state(r) for sim in sims]
+        for seed, sim, state in zip(seeds, sims, states):
+            row = sim.finish_round(r, state)
+            rows.append({"scheme": scheme, "seed": seed,
+                         "classes_per_client": classes_per_client,
+                         "distribution": distribution, **row})
+    return rows
+
+
+def aggregate_rows(rows: List[Dict]) -> List[Dict]:
+    """Attach across-seed mean/std columns to every per-seed row (tidy:
+    the aggregate is repeated within its (round, scheme, classes,
+    distribution) group)."""
+    groups: Dict[Tuple, List[Dict]] = {}
+    for row in rows:
+        key = (row["round"], row["scheme"], row["classes_per_client"],
+               row["distribution"])
+        groups.setdefault(key, []).append(row)
+    out = []
+    for row in rows:
+        key = (row["round"], row["scheme"], row["classes_per_client"],
+               row["distribution"])
+        grp = groups[key]
+        agg = {}
+        for metric in ("accuracy", "n_selected", "n_straggler"):
+            vals = np.asarray([g[metric] for g in grp], np.float64)
+            agg[f"{metric}_mean"] = float(vals.mean())
+            # sample std (ddof=1): the 2-3 seeds CI runs are a sample of
+            # the seed distribution, and ddof=0 would understate the
+            # error bars by ~30% at n=2
+            agg[f"{metric}_std"] = float(vals.std(ddof=1)) \
+                if len(vals) > 1 else 0.0
+        out.append({**row, **agg})
+    return out
+
+
+def rows_to_csv(rows: List[Dict]) -> str:
+    """Deterministic tidy CSV: fixed column order, fixed float formats,
+    rows sorted by (scheme, classes, distribution, seed, round)."""
+    buf = io.StringIO()
+    buf.write(",".join(CSV_COLUMNS) + "\n")
+    for row in sorted(rows, key=lambda r: (
+            r["scheme"], r["classes_per_client"], r["distribution"],
+            r["seed"], r["round"])):
+        cells = []
+        for col in CSV_COLUMNS:
+            v = row[col]
+            cells.append(_FMT[col].format(v) if col in _FMT else str(v))
+        buf.write(",".join(cells) + "\n")
+    return buf.getvalue()
+
+
+def _run_group_worker(args: Tuple) -> List[Dict]:
+    """Top-level (picklable) worker: one cell group, serial in-process."""
+    scheme, classes, dist, seeds, rounds, cfg_fn, vmap_prefix = args
+    return run_seed_group(scheme, classes, dist, seeds, rounds,
+                          cfg_fn=cfg_fn, vmap_prefix=vmap_prefix)
+
+
+def sweep(schemes: Sequence[str], classes_list: Sequence[int],
+          distributions: Sequence[str], seeds: Sequence[int], rounds: int,
+          cfg_fn: ConfigFn = fast_cell_config, vmap_prefix: bool = True,
+          workers: int = 1,
+          log: Optional[Callable[[str], None]] = None) -> List[Dict]:
+    """Run the full grid and return aggregated tidy rows.
+
+    Cell groups are placed round-robin over ``sweep_devices()`` (serial
+    fallback on one device); ``workers > 1`` additionally fans groups
+    out over spawn-based processes (each worker owns its device runtime,
+    so the device placement is left to the workers; ``cfg_fn`` crosses
+    the process boundary by reference, so it must be a module-level
+    function — a closure fails loudly at submission, never silently
+    switching profiles)."""
+    log = log or (lambda s: None)
+    groups: List[Group] = [(s, c, d) for s in schemes for c in classes_list
+                           for d in distributions]
+    rows: List[Dict] = []
+    if workers > 1:
+        import multiprocessing as mp
+        from concurrent.futures import ProcessPoolExecutor
+        jobs = [(s, c, d, tuple(seeds), rounds, cfg_fn, vmap_prefix)
+                for (s, c, d) in groups]
+        with ProcessPoolExecutor(
+                max_workers=workers,
+                mp_context=mp.get_context("spawn")) as pool:
+            for (s, c, d), got in zip(groups,
+                                      pool.map(_run_group_worker, jobs)):
+                log(f"[sweep] {s} classes={c} {d}: {len(got)} rows")
+                rows.extend(got)
+        return aggregate_rows(rows)
+
+    devices = sweep_devices()
+    for i, (scheme, classes, dist) in enumerate(groups):
+        dev = devices[i % len(devices)]
+        t0 = time.time()
+        with jax.default_device(dev):
+            got = run_seed_group(scheme, classes, dist, seeds, rounds,
+                                 cfg_fn=cfg_fn, vmap_prefix=vmap_prefix)
+        rows.extend(got)
+        accs = [r["accuracy"] for r in got if r["round"] == rounds - 1]
+        log(f"[sweep] {scheme} classes={classes} {dist} on {dev}: "
+            f"final acc {np.mean(accs):.3f} +/- {np.std(accs):.3f} "
+            f"({len(seeds)} seeds, {time.time() - t0:.0f}s)")
+    return aggregate_rows(rows)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--schemes", default="all",
+                    help="comma list or 'all' (dcs,ccs-fuzzy,random)")
+    ap.add_argument("--classes", default="9",
+                    help="comma list of classes-per-client (Fig. 8: 9,6,2)")
+    ap.add_argument("--distributions", default="uniform",
+                    help="comma list (Fig. 7: uniform,extreme)")
+    ap.add_argument("--seeds", type=int, default=2,
+                    help="number of seeds per cell (0..N-1)")
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--fast", action="store_true",
+                    help="CPU-budget profile (the default)")
+    ap.add_argument("--paper-profile", action="store_true",
+                    help="Table 3 profile (expensive on CPU)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="worker processes for cell groups (1 = in-process)")
+    ap.add_argument("--no-vmap", action="store_true",
+                    help="disable the seed-vmapped selection prefix")
+    ap.add_argument("--out", default="sweep.csv")
+    args = ap.parse_args(argv)
+
+    if args.fast and args.paper_profile:
+        ap.error("--fast and --paper-profile are mutually exclusive")
+    if args.seeds < 1:
+        ap.error("--seeds must be >= 1")
+    if args.rounds < 1:
+        ap.error("--rounds must be >= 1")
+    schemes = SCHEMES if args.schemes == "all" \
+        else tuple(args.schemes.split(","))
+    for s in schemes:
+        if s not in SCHEMES:
+            ap.error(f"unknown scheme {s!r} (known: {SCHEMES})")
+    classes_list = tuple(int(c) for c in args.classes.split(","))
+    distributions = tuple(args.distributions.split(","))
+    cfg_fn = paper_cell_config if args.paper_profile else fast_cell_config
+
+    t0 = time.time()
+    rows = sweep(schemes, classes_list, distributions,
+                 seeds=range(args.seeds), rounds=args.rounds, cfg_fn=cfg_fn,
+                 vmap_prefix=not args.no_vmap, workers=args.workers,
+                 log=lambda s: print(s, flush=True))
+    csv_text = rows_to_csv(rows)
+    with open(args.out, "w") as f:
+        f.write(csv_text)
+    print(f"[sweep] wrote {len(rows)} rows "
+          f"({len(schemes)}x{len(classes_list)}x{len(distributions)} cells "
+          f"x {args.seeds} seeds x {args.rounds} rounds) to {args.out} "
+          f"in {time.time() - t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -110,6 +110,20 @@ def constrain_kv(x: jax.Array) -> jax.Array:
         x, NamedSharding(mesh, P(*spec)))
 
 
+def sweep_devices() -> Sequence[jax.Device]:
+    """Devices available for embarrassingly-parallel sweep cells (whole
+    (seed, scheme, partition) simulations — ``repro.launch.sweep``).
+
+    Inside an active ``logical_sharding`` context the mesh's device list
+    is the placement domain; otherwise every local device is.  A
+    single-CPU host returns one device — the sweep harness falls back to
+    serial execution in that case."""
+    mesh = current_mesh()
+    if mesh is not None:
+        return list(mesh.devices.flat)
+    return list(jax.devices())
+
+
 # Default logical rules for the production meshes.
 DEFAULT_RULES: Dict[str, AxisAssign] = {
     "batch": ("pod", "data"),

@@ -64,6 +64,18 @@ def test_batch_consistency(n):
     np.testing.assert_allclose(full[0], one[0], rtol=1e-5)
 
 
+def test_evaluate_raw_folds_eq8(ev):
+    """evaluate_raw on raw feature columns equals host-side Eq. 8
+    normalization + evaluate — the in-kernel fold (ISSUE 3) must stay
+    interchangeable with the two-step path the pipeline replaced."""
+    scales = jnp.array([4.5e3, 1.04e7, 1.0, 2.3])   # |D|, bps, 1/C, loss
+    raw = jax.random.uniform(jax.random.PRNGKey(3), (33, 4)) * scales
+    direct = np.asarray(ev.evaluate_raw(raw))
+    normed = jnp.clip(raw / jnp.maximum(raw.max(axis=0), 1e-9), 0.0, 1.0)
+    two_step = np.asarray(ev.evaluate(normed))
+    np.testing.assert_allclose(direct, two_step, rtol=1e-5, atol=1e-4)
+
+
 def test_calibration_moves_means():
     ev = FuzzyEvaluator()
     hist = np.random.default_rng(0).beta(2, 5, size=(1000, 4))

@@ -87,6 +87,32 @@ def test_fuzzy_pallas_vs_oracle(p):
                                atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.parametrize("p", [1, 30, 300, 1025])
+def test_fuzzy_pallas_vs_jnp_normalize_raw(p):
+    """Eq. 8 folded into the kernel (ISSUE 3): pallas-interpret and the
+    jnp reference agree on *raw* feature batches (arbitrary per-column
+    scales: |D_i| ~ 1e3, TA ~ 1e7, CC ~ 1, LF ~ 1), and the in-kernel
+    normalization equals host-side Eq. 8 + the unnormalized kernel."""
+    table, levels = build_rule_table()
+    scales = jnp.array([4.5e3, 1.04e7, 1.0, 2.3])
+    x = jax.random.uniform(jax.random.PRNGKey(p + 7), (p, 4)) * scales
+    means = jnp.tile(jnp.array([0.15, 0.5, 0.85]), (4, 1))
+    sigmas = jnp.full((4, 3), 0.18)
+    centers = jnp.linspace(0.0, 100.0, 9)
+    e_jnp = kref.fuzzy_eval_ref(x, means, sigmas, table, levels, centers,
+                                normalize=True)
+    e_pal = fuzzy_eval_pallas(x, means, sigmas, table, levels, centers,
+                              interpret=True, normalize=True)
+    np.testing.assert_allclose(np.asarray(e_jnp), np.asarray(e_pal),
+                               atol=1e-3, rtol=1e-4)
+    # folded == host-side Eq. 8 (value / column max) + plain kernel
+    x_norm = x / jnp.maximum(x.max(axis=0), 1e-9)
+    e_host = kref.fuzzy_eval_ref(x_norm, means, sigmas, table, levels,
+                                 centers)
+    np.testing.assert_allclose(np.asarray(e_jnp), np.asarray(e_host),
+                               atol=1e-4, rtol=1e-5)
+
+
 # --------------------------------------------------------------------------
 # neighbor_elect
 # --------------------------------------------------------------------------

@@ -1,0 +1,111 @@
+"""Sweep-harness tests (ISSUE 3): CSV schema golden test, bitwise
+determinism of a 2-seed x 2-scheme sweep across runs, and aggregation
+consistency.  All on a tiny fast profile so the fast CI tier covers the
+acceptance criteria."""
+import numpy as np
+import pytest
+
+from repro.fl.mobility import MobilityConfig
+from repro.fl.partition import PartitionConfig
+from repro.fl.rounds import FLSimConfig
+from repro.launch.sweep import (CSV_COLUMNS, aggregate_rows, rows_to_csv,
+                                sweep)
+
+SCHEMES = ("dcs", "random")
+SEEDS = (0, 1)
+ROUNDS = 2
+
+
+def _tiny(scheme, classes, dist, seed):
+    return FLSimConfig(
+        scheme=scheme, local_epochs=1, samples_per_class=260,
+        probe_samples=64, seed=seed,
+        partition=PartitionConfig(n_clients=10, big_clients=3,
+                                  big_quantity=120, small_quantity=40,
+                                  classes_per_client=classes, seed=seed),
+        mobility=MobilityConfig(n_vehicles=10, distribution=dist,
+                                seed=seed))
+
+
+def _run_sweep():
+    rows = sweep(SCHEMES, (9,), ("uniform",), seeds=SEEDS, rounds=ROUNDS,
+                 cfg_fn=_tiny)
+    return rows, rows_to_csv(rows)
+
+
+@pytest.fixture(scope="module")
+def sweep_result():
+    return _run_sweep()
+
+
+def test_csv_schema_golden(sweep_result):
+    """The tidy CSV header is pinned: cell identity + per-seed metrics +
+    across-seed mean/std columns, in this exact order."""
+    rows, csv_text = sweep_result
+    lines = csv_text.strip().split("\n")
+    assert lines[0] == ",".join(CSV_COLUMNS)
+    assert lines[0] == (
+        "round,scheme,seed,classes_per_client,distribution,accuracy,"
+        "n_selected,n_aggregated,n_straggler,mean_eval_selected,"
+        "state_bytes,upload_bytes,state_time_s,comm_time_s,"
+        "accuracy_mean,accuracy_std,n_selected_mean,n_selected_std,"
+        "n_straggler_mean,n_straggler_std")
+    # one row per (scheme, seed, round), every cell fully populated
+    assert len(lines) == 1 + len(SCHEMES) * len(SEEDS) * ROUNDS
+    for line in lines[1:]:
+        assert len(line.split(",")) == len(CSV_COLUMNS)
+    assert {r["scheme"] for r in rows} == set(SCHEMES)
+    assert {r["seed"] for r in rows} == set(SEEDS)
+    for r in rows:
+        assert 0.0 <= r["accuracy"] <= 1.0
+        assert r["n_aggregated"] <= r["n_selected"]
+
+
+def test_sweep_bitwise_deterministic(sweep_result):
+    """Running the identical 2-seed x 2-scheme sweep twice yields a
+    byte-identical CSV (fixed row order, fixed float formatting, pure
+    staged prefix underneath)."""
+    _, first = sweep_result
+    _, second = _run_sweep()
+    assert first == second
+
+
+def test_aggregate_mean_std_consistent(sweep_result):
+    """The mean/std columns equal numpy aggregation of the per-seed rows
+    within each (round, scheme, classes, distribution) group."""
+    rows, _ = sweep_result
+    for scheme in SCHEMES:
+        for rnd in range(ROUNDS):
+            grp = [r for r in rows
+                   if r["scheme"] == scheme and r["round"] == rnd]
+            assert len(grp) == len(SEEDS)
+            accs = np.asarray([r["accuracy"] for r in grp])
+            for r in grp:
+                assert r["accuracy_mean"] == pytest.approx(accs.mean())
+                assert r["accuracy_std"] == pytest.approx(
+                    accs.std(ddof=1))         # sample std: seeds are a
+                                              # sample, not the population
+
+
+def test_aggregate_rows_groups_by_cell():
+    """Aggregation groups strictly by (round, scheme, classes, dist) —
+    other cells' seeds never leak into a group's statistics."""
+    rows = [
+        {"round": 0, "scheme": "dcs", "classes_per_client": 9,
+         "distribution": "uniform", "seed": s, "accuracy": a,
+         "n_selected": 5, "n_straggler": 0}
+        for s, a in ((0, 0.2), (1, 0.4))
+    ] + [
+        {"round": 0, "scheme": "random", "classes_per_client": 9,
+         "distribution": "uniform", "seed": 0, "accuracy": 1.0,
+         "n_selected": 5, "n_straggler": 0}
+    ]
+    agg = aggregate_rows(rows)
+    dcs = [r for r in agg if r["scheme"] == "dcs"]
+    assert all(r["accuracy_mean"] == pytest.approx(0.3) for r in dcs)
+    assert all(r["accuracy_std"] == pytest.approx(np.std([0.2, 0.4],
+                                                         ddof=1))
+               for r in dcs)
+    rnd = [r for r in agg if r["scheme"] == "random"]
+    assert rnd[0]["accuracy_mean"] == pytest.approx(1.0)
+    assert rnd[0]["accuracy_std"] == 0.0       # single seed: no spread

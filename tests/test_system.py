@@ -27,14 +27,19 @@ def _sim(scheme, seed=0, rounds=1):
         mobility=MobilityConfig(n_vehicles=10, seed=seed), seed=seed))
 
 
+def _round0_state(sim):
+    """Round-0 positions/evals from the staged selection prefix (the
+    host-driven ``sim._features`` path this file used pre-ISSUE-3)."""
+    state = jax.device_get(sim.selection_state(0))
+    return np.asarray(state["pos"]), jnp.asarray(state["evals"])
+
+
 def test_dcs_selected_count_tracks_paper():
     """Paper: DCS averages ~5 selected on the 30-vehicle road with top_m=2
     per 200 m.  On our 10-vehicle debug road, DCS must select >=1 and <=
     top_m * ceil(road/range) vehicles each round."""
     sim = _sim("dcs")
-    pos = sim.mobility.positions(0.0)
-    feats = sim._features(pos)
-    evals = sim.evaluator.evaluate(jnp.asarray(feats))
+    pos, evals = _round0_state(sim)
     mask = np.asarray(dcs_select(jnp.asarray(pos), evals,
                                  comm_range=200.0, top_m=2, e_tau=30.0))
     assert 1 <= mask.sum() <= 2 * int(np.ceil(1000 / 200.0)) + 2
@@ -42,9 +47,8 @@ def test_dcs_selected_count_tracks_paper():
 
 def test_dcs_selects_better_than_average():
     sim = _sim("dcs", seed=1)
-    pos = sim.mobility.positions(0.0)
-    feats = sim._features(pos)
-    evals = np.asarray(sim.evaluator.evaluate(jnp.asarray(feats)))
+    pos, evals = _round0_state(sim)
+    evals = np.asarray(evals)
     mask = np.asarray(dcs_select(jnp.asarray(pos), jnp.asarray(evals),
                                  comm_range=200.0, top_m=2, e_tau=30.0))
     if mask.sum() and mask.sum() < len(evals):
@@ -55,9 +59,7 @@ def test_dcs_vs_ccs_fuzzy_selection_overlap():
     """DCS approximates centralized fuzzy selection (the paper's headline):
     selected sets overlap substantially under uniform vehicle placement."""
     sim = _sim("dcs", seed=2)
-    pos = sim.mobility.positions(0.0)
-    feats = sim._features(pos)
-    evals = sim.evaluator.evaluate(jnp.asarray(feats))
+    pos, evals = _round0_state(sim)
     m_dcs = np.asarray(dcs_select(jnp.asarray(pos), evals,
                                   comm_range=200.0, top_m=2, e_tau=30.0))
     m_ccs = np.asarray(ccs_fuzzy_select(evals, int(m_dcs.sum())))
