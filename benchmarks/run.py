@@ -24,7 +24,8 @@ from benchmarks.paper_figures import (bench_fig2_overhead,
                                       bench_fig9_accumulated_time)
 from benchmarks.roofline import bench_roofline_table
 from benchmarks.staleness import bench_staleness
-from benchmarks.selection_collectives import bench_selection_collectives
+from benchmarks.selection_collectives import (bench_prefix_sharding,
+                                              bench_selection_collectives)
 
 BENCHES = {
     "engine_throughput": bench_engine_throughput,
@@ -36,6 +37,7 @@ BENCHES = {
     "kernels_fuzzy": bench_fuzzy_eval,
     "kernels_elect": bench_neighbor_elect,
     "kernels_wkv6": bench_wkv6,
+    "prefix_sharding": bench_prefix_sharding,
     "selection_collectives": bench_selection_collectives,
     "staleness": bench_staleness,
     "roofline": bench_roofline_table,

@@ -1,11 +1,19 @@
 """Beyond-paper benchmark: the selection protocols' communication cost in
-*compiled HLO collective bytes* — the mesh-native restatement of Fig. 2/9.
+*compiled HLO collective bytes* — the mesh-native restatement of Fig. 2/9
+— plus the mesh-sharded selection prefix's per-device scaling.
 
-Runs in a subprocess with 16 forced host devices (so collectives
-materialize) and compares per-device collective bytes of:
+Runs in a subprocess with forced host devices (so collectives
+materialize).  ``bench_selection_collectives`` compares per-device
+collective bytes of:
   - ccs_state_gather  (full state vector to the server)  ~ O(N * state_dim)
   - ccs_fuzzy_gather  (scalar evaluations to the server)  ~ O(N)
   - dcs_neighbor_exchange (boundary window to 2 neighbours) ~ O(window)
+
+``bench_prefix_sharding`` runs ``selection_prefix_sharded`` at a fixed
+fleet size on 1/2/4/8-device client meshes and records the *measured*
+per-device bytes of the client-axis arrays (statics shards + packed
+probe region, via ``addressable_shards``) and the prefix wall time —
+the per-device client-axis memory must shrink ~1/K with mesh size.
 """
 from __future__ import annotations
 
@@ -59,4 +67,114 @@ def bench_selection_collectives() -> List[str]:
         ratio = data["ccs_state_gather"] / data["dcs_neighbor_exchange"]
         rows.append(f"collective_ratio_ccs_over_dcs,{ratio:.1f},"
                     "Eq.5 elimination, in compiled HLO bytes")
+    return rows
+
+
+_CHILD_PREFIX = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import json
+import time
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs.mnist_cnn import CONFIG as CNN_CFG
+from repro.core.fuzzy import FuzzyEvaluator, FuzzyEvaluatorConfig
+from repro.fl import pipeline
+from repro.fl.network import NetworkConfig
+from repro.fl.timing import TimingConfig
+from repro.launch.mesh import make_clients_mesh
+from repro.models.cnn import init_cnn
+
+N, B, PER = 256, 64, 64            # clients, probe batch, samples/client
+rng = np.random.default_rng(0)
+ev = FuzzyEvaluator(FuzzyEvaluatorConfig())
+f32 = jnp.float32
+S = N * PER                        # one whole probe batch per client
+st = pipeline.RoundStatics(
+    x0=jnp.asarray(rng.uniform(0, 1000.0, N), f32),
+    speeds=jnp.asarray(rng.uniform(20, 33, N), f32),
+    jitter_phase=jnp.asarray(rng.uniform(0, 6.28, N), f32),
+    slowdown=jnp.asarray(rng.uniform(1, 4, N), f32),
+    n_valid=jnp.asarray(np.full(N, PER), f32),
+    probe_images=jnp.asarray(
+        rng.normal(size=(S, 28, 28, 1)).astype(np.float32)),
+    probe_labels=jnp.asarray(rng.integers(0, 10, S).astype(np.int32)),
+    probe_seg=jnp.asarray(np.repeat(np.arange(N), PER).astype(np.int32)),
+    probe_counts=jnp.asarray(np.full(N, PER, np.int32)),
+    means=jnp.asarray(ev.cfg.means, f32),
+    sigmas=jnp.asarray(ev.cfg.sigmas, f32),
+    level_centers=jnp.asarray(ev.level_centers, f32))
+cfg = pipeline.StageConfig(
+    scheme="dcs", n_clients=N, comm_range_m=200.0, top_m=2, e_tau=30.0,
+    n_clients_central=5, model_bytes=5.2e6, road_length_m=1000.0,
+    speed_jitter=1.0, timing=TimingConfig(epochs=1, batch_size=20,
+                                          deadline_s=60.0),
+    network=NetworkConfig(), probe_batch=B)
+params = init_cnn(jax.random.PRNGKey(0), CNN_CFG)
+key = jax.random.PRNGKey(1)
+net_key = jax.random.PRNGKey(2)
+
+# the client-axis arrays the prefix shards, with their partition specs
+CLIENT_LEAVES = [
+    (st.x0, P("clients")), (st.speeds, P("clients")),
+    (st.jitter_phase, P("clients")), (st.slowdown, P("clients")),
+    (st.n_valid, P("clients")),
+    (st.probe_images, P("clients", None, None, None)),
+    (st.probe_labels, P("clients")), (st.probe_seg, P("clients")),
+]
+
+out = {}
+for k in (1, 2, 4, 8):
+    mesh = make_clients_mesh(k)
+    per_dev = {}
+    for arr, spec in CLIENT_LEAVES:
+        sharded = jax.device_put(arr, NamedSharding(mesh, spec))
+        for sh in sharded.addressable_shards:
+            per_dev[sh.device.id] = (per_dev.get(sh.device.id, 0)
+                                     + sh.data.nbytes)
+    res = pipeline.selection_prefix_sharded(
+        st, params, jnp.int32(0), key, net_key, cfg=cfg, mesh=mesh)
+    jax.block_until_ready(res)                     # compile
+    reps = 3
+    t0 = time.perf_counter()
+    for r in range(1, reps + 1):
+        jax.block_until_ready(pipeline.selection_prefix_sharded(
+            st, params, jnp.int32(r), key, net_key, cfg=cfg, mesh=mesh))
+    out[str(k)] = {"bytes_per_device": max(per_dev.values()),
+                   "wall_ms": (time.perf_counter() - t0) / reps * 1e3,
+                   "n_selected": int(res["n_selected"])}
+print(json.dumps(out))
+"""
+
+
+def bench_prefix_sharding() -> List[str]:
+    # raise (-> benchmarks/run.py exits nonzero) instead of an error row:
+    # the CI test-sharded step gates on this bench, so a crashed sharded
+    # prefix or a silently-replicated client axis must fail the job
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD_PREFIX], capture_output=True,
+        text=True, env={**__import__("os").environ, "PYTHONPATH": "src"},
+        timeout=540)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"prefix_sharding child failed:\n{proc.stderr[-2000:]}")
+    data = json.loads(proc.stdout.strip().splitlines()[-1])
+    rows = []
+    for k, d in sorted(data.items(), key=lambda kv: int(kv[0])):
+        rows.append(f"prefix_clientaxis_bytes_per_device_k{k},"
+                    f"{d['bytes_per_device']:.3e},"
+                    f"N=256;64 probe samples/client")
+        rows.append(f"prefix_wall_ms_k{k},{d['wall_ms']:.1f},"
+                    f"sharded selection prefix, {k} emulated devices")
+    shrink = (data["1"]["bytes_per_device"]
+              / max(data["8"]["bytes_per_device"], 1))
+    if shrink < 4.0:                     # exact split measures 8.0
+        raise RuntimeError(
+            f"per-device client-axis memory shrank only {shrink:.2f}x "
+            f"from 1 to 8 shards — the client partition is replicating")
+    rows.append(f"prefix_clientaxis_shrink_1_to_8,{shrink:.2f},"
+                "per-device client-axis memory ratio (want ~8)")
     return rows

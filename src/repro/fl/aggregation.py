@@ -6,7 +6,7 @@ local objective — implemented as a gradient term in the local trainer.
 """
 from __future__ import annotations
 
-from typing import Any, List, Sequence
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,16 +26,49 @@ def fedavg(models: Sequence[Params], weights: Sequence[float]) -> Params:
     return jax.tree.map(avg, *models)
 
 
-def fedavg_masked(stacked_models: Params, weights: jax.Array) -> Params:
+def fedavg_masked(stacked_models: Params, weights: jax.Array,
+                  axis_name: Optional[str] = None) -> Params:
     """FedAvg over a leading client axis with (possibly zero) weights —
-    jit-friendly form used by the round engine.  weights: (C,)."""
-    w = weights / jnp.maximum(weights.sum(), 1e-9)
+    jit-friendly form used by the round engine.  weights: (C,).
+
+    ``axis_name`` is the mesh-sharded form: inside ``shard_map`` the
+    leading axis holds only this device's shard of the cohort, so the
+    weight total and the weighted model sum each finish with a ``psum``
+    over the named mesh axis — the global average lands replicated on
+    every device without the per-device stacks ever being gathered."""
+    tot = weights.sum()
+    if axis_name is not None:
+        tot = jax.lax.psum(tot, axis_name)
+    w = weights / jnp.maximum(tot, 1e-9)
 
     def avg(leaf):
-        return jnp.tensordot(w, leaf.astype(jnp.float32), axes=1).astype(
-            leaf.dtype)
+        part = jnp.tensordot(w, leaf.astype(jnp.float32), axes=1)
+        if axis_name is not None:
+            part = jax.lax.psum(part, axis_name)
+        return part.astype(leaf.dtype)
 
     return jax.tree.map(avg, stacked_models)
+
+
+def fedavg_sums(stacked_models: Params, weights: jax.Array,
+                axis_name: Optional[str] = None
+                ) -> Tuple[Params, jax.Array]:
+    """The *unnormalized* half of Eq. 2: ``(sum_i w_i * model_i, sum_i
+    w_i)``, psum'd over ``axis_name`` when sharded.  The grouped trainer
+    accumulates these partial sums across capacity groups (each group is
+    one trainer dispatch) and divides once at the end, so a multi-group
+    round still aggregates as a single global weighted average."""
+    tot = weights.sum()
+    if axis_name is not None:
+        tot = jax.lax.psum(tot, axis_name)
+
+    def wsum(leaf):
+        part = jnp.tensordot(weights, leaf.astype(jnp.float32), axes=1)
+        if axis_name is not None:
+            part = jax.lax.psum(part, axis_name)
+        return part
+
+    return jax.tree.map(wsum, stacked_models), tot
 
 
 def global_loss(losses: jax.Array, weights: jax.Array) -> jax.Array:

@@ -15,9 +15,13 @@ Three call shapes are exposed:
   ``cap`` and ``steps_per_epoch`` (small Table-3 clients stop paying for
   the 4500-sample group's step count);
 - packed (``dataset_loss_packed``): the Eq. 7 probe over a flat
-  concatenation of every client's *valid* probe samples, so no FLOPs are
-  spent convolving padding rows.  The batched round engine precomputes
-  the packing once (client membership is static across rounds).
+  concatenation of every client's probe samples.  The batched round
+  engine precomputes the packing once (client membership is static
+  across rounds); since the mesh-sharded client axis, the packing is
+  *client-aligned* — each client padded to whole probe batches — which
+  spends some forward FLOPs on sentinel rows but makes the per-client
+  losses independent of how the sample axis is split across devices
+  (see ``FLSimulation._build_packed_probe``).
 
 XLA:CPU notes (measured on the 2-core dev box, jax 0.4.37):
 

@@ -107,6 +107,13 @@ class CellularNetwork:
 # replaced by explicit PRNG keys, so the selection prefix jits as one
 # program and vmaps across seeds.  ``cfg`` is the frozen NetworkConfig —
 # hashable, so callers can close over it or pass it through jit statics.
+#
+# Each ``*_jax`` function is split into a *field draw* (the PRNG
+# realization over the full client axis) and a ``*_from_fields`` body
+# that is purely elementwise in the client dimension.  The mesh-sharded
+# selection prefix draws the fields globally (bit-identical to the
+# single-device draw) and shards them alongside the other client-axis
+# arrays, so the per-shard body needs no collective and no re-keying.
 # --------------------------------------------------------------------------
 
 # Reno is simulated for this many RTTs before the CWND window is read
@@ -119,10 +126,12 @@ _CWND_STEPS = 64
 _PINNED_CHANNEL_KEY = 0
 
 
-def true_rate_bps_jax(cfg: NetworkConfig, pos: jax.Array,
-                      key: jax.Array) -> jax.Array:
-    """Achievable rate at ``pos`` with log-normal shadowing drawn from
-    ``key`` — the pure twin of ``CellularNetwork.true_rate_bps``."""
+def true_rate_bps_from_shadow(cfg: NetworkConfig, pos: jax.Array,
+                              shadow: jax.Array) -> jax.Array:
+    """Achievable rate at ``pos`` given a *raw standard-normal* shadowing
+    field (one value per client) — elementwise in the client axis, so a
+    shard of positions plus the matching shard of the field yields the
+    same rates the full arrays would."""
     bs_pos = (jnp.arange(cfg.n_bs) + 0.5) * (cfg.road_length_m / cfg.n_bs)
     d = jnp.min(jnp.abs(pos[:, None] - bs_pos[None, :]), axis=1)
     d_max = cfg.road_length_m / cfg.n_bs / 2.0
@@ -130,9 +139,15 @@ def true_rate_bps_jax(cfg: NetworkConfig, pos: jax.Array,
     log_rate = (np.log10(cfg.worst_rate_bps)
                 + frac * (np.log10(cfg.best_rate_bps)
                           - np.log10(cfg.worst_rate_bps)))
-    shadow = jax.random.normal(key, pos.shape) * (
-        cfg.shadowing_sigma_db / 10.0)
-    return 10.0 ** (log_rate + shadow)
+    return 10.0 ** (log_rate + shadow * (cfg.shadowing_sigma_db / 10.0))
+
+
+def true_rate_bps_jax(cfg: NetworkConfig, pos: jax.Array,
+                      key: jax.Array) -> jax.Array:
+    """Achievable rate at ``pos`` with log-normal shadowing drawn from
+    ``key`` — the pure twin of ``CellularNetwork.true_rate_bps``."""
+    return true_rate_bps_from_shadow(cfg, pos,
+                                     jax.random.normal(key, pos.shape))
 
 
 def _loss_prob_jax(cfg: NetworkConfig, rate_bps: jax.Array) -> jax.Array:
@@ -141,23 +156,56 @@ def _loss_prob_jax(cfg: NetworkConfig, rate_bps: jax.Array) -> jax.Array:
     return jnp.clip(0.08 * (1.0 - frac) + 0.002, 0.002, 0.2)
 
 
-def cwnd_history_jax(cfg: NetworkConfig, pos: jax.Array, key: jax.Array,
+def pinned_channel_shadow(n: int) -> jax.Array:
+    """The predictor's pinned shadowing realization over ``n`` clients
+    (the jax equivalent of the host model's ``default_rng(0)``)."""
+    return jax.random.normal(jax.random.PRNGKey(_PINNED_CHANNEL_KEY), (n,))
+
+
+def cwnd_loss_fields(key: jax.Array, n: int,
                      steps: int = _CWND_STEPS) -> jax.Array:
-    """Reno AIMD for ``steps`` RTTs -> (N, cwnd_history) recent windows."""
-    rate = true_rate_bps_jax(cfg, pos,
-                             jax.random.PRNGKey(_PINNED_CHANNEL_KEY))
+    """The Reno simulation's per-RTT loss draws as an explicit
+    ``(steps, n)`` uniform field.  vmapping ``uniform`` over the split
+    keys produces bit-identical values to drawing inside the scan, so
+    the field-based history below matches the key-based one exactly."""
+    return jax.vmap(lambda k: jax.random.uniform(k, (n,)))(
+        jax.random.split(key, steps))
+
+
+def cwnd_history_from_fields(cfg: NetworkConfig, pos: jax.Array,
+                             shadow: jax.Array,
+                             loss_u: jax.Array) -> jax.Array:
+    """Reno AIMD over precomputed random fields -> (N, cwnd_history).
+    ``shadow``: raw normal channel field; ``loss_u``: (steps, N) uniform
+    loss draws.  Elementwise in the client axis."""
+    rate = true_rate_bps_from_shadow(cfg, pos, shadow)
     p_loss = _loss_prob_jax(cfg, rate)
     bdp = rate * cfg.rtt_s / (8.0 * cfg.packet_bytes)
 
-    def step(cwnd, k):
-        loss = jax.random.uniform(k, pos.shape) < p_loss
+    def step(cwnd, u):
+        loss = u < p_loss
         cwnd = jnp.where(loss, jnp.maximum(cwnd / 2.0, 1.0), cwnd + 1.0)
         cwnd = jnp.minimum(cwnd, jnp.maximum(bdp, 1.0))    # rate-limited
         return cwnd, cwnd
 
-    _, hist = jax.lax.scan(step, jnp.ones(pos.shape),
-                           jax.random.split(key, steps), unroll=8)
+    _, hist = jax.lax.scan(step, jnp.ones(pos.shape), loss_u, unroll=8)
     return hist[-cfg.cwnd_history:].T
+
+
+def cwnd_history_jax(cfg: NetworkConfig, pos: jax.Array, key: jax.Array,
+                     steps: int = _CWND_STEPS) -> jax.Array:
+    """Reno AIMD for ``steps`` RTTs -> (N, cwnd_history) recent windows."""
+    return cwnd_history_from_fields(
+        cfg, pos, pinned_channel_shadow(pos.shape[0]),
+        cwnd_loss_fields(key, pos.shape[0], steps))
+
+
+def predicted_throughput_from_fields(cfg: NetworkConfig, pos: jax.Array,
+                                     shadow: jax.Array,
+                                     loss_u: jax.Array) -> jax.Array:
+    """CWND-average predictor over precomputed fields (sharded prefix)."""
+    h = cwnd_history_from_fields(cfg, pos, shadow, loss_u)
+    return h.mean(axis=1) * 8.0 * cfg.packet_bytes / cfg.rtt_s
 
 
 def predicted_throughput_jax(cfg: NetworkConfig, pos: jax.Array,
@@ -167,7 +215,16 @@ def predicted_throughput_jax(cfg: NetworkConfig, pos: jax.Array,
     return h.mean(axis=1) * 8.0 * cfg.packet_bytes / cfg.rtt_s
 
 
+def upload_time_s_from_shadow(cfg: NetworkConfig, pos: jax.Array,
+                              payload_bytes: float, shadow: jax.Array,
+                              latency_s: float = 0.2) -> jax.Array:
+    return (payload_bytes * 8.0 / true_rate_bps_from_shadow(cfg, pos, shadow)
+            + latency_s)
+
+
 def upload_time_s_jax(cfg: NetworkConfig, pos: jax.Array,
                       payload_bytes: float, key: jax.Array,
                       latency_s: float = 0.2) -> jax.Array:
-    return payload_bytes * 8.0 / true_rate_bps_jax(cfg, pos, key) + latency_s
+    return upload_time_s_from_shadow(cfg, pos, payload_bytes,
+                                     jax.random.normal(key, pos.shape),
+                                     latency_s)

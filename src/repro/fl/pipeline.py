@@ -50,19 +50,25 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.rules import build_rule_table
 from repro.core.selection import (ccs_fuzzy_select, ccs_random_select,
                                   dcs_select, selection_stats)
-from repro.fl.aggregation import fedavg_masked
+from repro.fl.aggregation import fedavg_masked, fedavg_sums
 from repro.fl.client import dataset_loss_packed, local_train_batch
 from repro.fl.mobility import positions_jax
-from repro.fl.network import (NetworkConfig, predicted_throughput_jax,
-                              upload_time_s_jax)
+from repro.fl.network import (NetworkConfig, cwnd_loss_fields,
+                              pinned_channel_shadow,
+                              predicted_throughput_from_fields,
+                              predicted_throughput_jax,
+                              upload_time_s_from_shadow, upload_time_s_jax)
 from repro.fl.partition import ClientGroup
 from repro.fl.timing import (TimingConfig, completes_before_deadline,
                              training_time_s)
 from repro.kernels import ops as kops
+from repro.sharding.api import CLIENT_AXIS, current_mesh, resolve_pspec
 
 Params = Any
 
@@ -300,3 +306,330 @@ def aggregate(params: Params,
         return params
     merged, weights = trained
     return fedavg_masked(merged, weights)
+
+
+# --------------------------------------------------------------------------
+# mesh-sharded client axis (shard_map over a ("clients",) mesh)
+#
+# The same staged prefix, partitioned: every client-axis array (statics
+# leaves, random fields, stage intermediates) lives as one shard per
+# device, padded with masked dummy clients to a mesh multiple.  The few
+# genuinely global steps are explicit collectives:
+#
+#   - the packed Eq. 7 probe reduces per-client loss sums with a psum
+#     (each client's samples live wholly on its owner shard, so the psum
+#     only adds exact zeros from the other devices — bitwise-neutral);
+#   - the Eq. 8 column maxima are a pmax (max is associativity-exact);
+#   - selection (DCS neighbour election windows / CCS quotas / stats)
+#     runs on all_gather'ed (N,) evaluation+position vectors — the only
+#     arrays that cross devices are N floats, never the (S, 28, 28, 1)
+#     probe stacks or the per-group training tensors.
+#
+# PRNG parity: the channel/loss randomness is drawn as *global fields*
+# with exactly the keys and shapes of the unsharded prefix
+# (fl/network.py `*_from_fields` split), then padded and sharded like any
+# other client-axis array — so a sharded round reproduces the
+# single-device selection masks bit-for-bit (pinned in
+# tests/test_sharding.py).
+# --------------------------------------------------------------------------
+
+
+def mesh_client_shards(mesh: Optional[Mesh]) -> int:
+    """The client-axis partition factor of ``mesh`` (1 when unsharded)."""
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get(CLIENT_AXIS, 1))
+
+
+def active_client_mesh() -> Optional[Mesh]:
+    """The ambient ``logical_sharding`` mesh iff it has a live
+    ``clients`` axis — the launchers' ``--mesh clients=K`` activates one;
+    unit tests and the single-device drivers see None."""
+    mesh = current_mesh()
+    return mesh if mesh_client_shards(mesh) > 1 else None
+
+
+def pad_to_shards(n: int, shards: int) -> int:
+    """Client count padded up to a mesh multiple (masked dummy clients —
+    never a silent replicate-on-indivisible fallback)."""
+    return -(-n // shards) * shards
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_prefix_fn(cfg: StageConfig, mesh: Mesh, seeds: bool):
+    """Build (and cache) the jitted shard_map'd prefix for one
+    (StageConfig, mesh) pair.  ``seeds=True`` vmaps the per-shard body
+    over a leading seed axis inside the same shard_map — the sweep's
+    multi-seed dispatch with every seed's client axis partitioned."""
+    k = mesh_client_shards(mesh)
+    n = cfg.n_clients
+    n_pad = pad_to_shards(n, k)
+    shard_n = n_pad // k
+    pad = n_pad - n
+    table, levels = _rules()
+
+    def core(x0, speeds, jphase, slowdown, n_valid, pim, plb, pseg, counts,
+             means, sigmas, centers, params, t_s, k_sel, pin_shadow,
+             loss_u, up_shadow):
+        """Per-device body: all (shard_n,)-leading arrays are this
+        device's client shard; params/counts/membership params are
+        replicated; ``pin_shadow``/``loss_u``/``up_shadow`` are the
+        device's slice of the globally-drawn random fields."""
+        i = jax.lax.axis_index(CLIENT_AXIS)
+        gid = i * shard_n + jnp.arange(shard_n)
+        valid = gid < n                      # False on dummy pad clients
+
+        # stage: positions + raw features (elementwise in the shard)
+        pos = positions_jax(x0, speeds, jphase, t_s,
+                            road_length_m=cfg.road_length_m,
+                            speed_jitter=cfg.speed_jitter)
+        ta = predicted_throughput_from_fields(cfg.network, pos, pin_shadow,
+                                              loss_u)
+        # Eq. 7 over the local probe shard; every client's samples live
+        # on its owner device, so the psum adds exact zeros elsewhere
+        lf_part = dataset_loss_packed(params, pim, plb, pseg, counts,
+                                      n_clients=n, batch=cfg.probe_batch)
+        lf_full = jax.lax.psum(lf_part, CLIENT_AXIS)
+        lf = jax.lax.dynamic_slice_in_dim(jnp.pad(lf_full, (0, pad)),
+                                          i * shard_n, shard_n)
+        feats = jnp.stack([n_valid, ta, 1.0 / slowdown, lf],
+                          axis=1).astype(jnp.float32)
+
+        # stage: fuzzy evaluation with the Eq. 8 maxima pmax'd globally
+        col_max = jax.lax.pmax(
+            jnp.where(valid[:, None], feats, -jnp.inf).max(axis=0),
+            CLIENT_AXIS)
+        evals = kops.fuzzy_eval(feats, means, sigmas, table, levels,
+                                centers, normalize=True, col_maxima=col_max)
+        evals = jnp.where(valid, evals, 0.0)
+
+        # stage: selection on gathered (N,) scalars — the DCS election
+        # window / CCS quota are the prefix's only all-to-all state
+        ev_g = jax.lax.all_gather(evals, CLIENT_AXIS, tiled=True)[:n]
+        pos_g = jax.lax.all_gather(pos, CLIENT_AXIS, tiled=True)[:n]
+        mask_g = select(cfg, pos_g, ev_g, k_sel)
+        mask = jax.lax.dynamic_slice_in_dim(jnp.pad(mask_g, (0, pad)),
+                                            i * shard_n, shard_n)
+
+        # stage: Eq. 6 deadline, shard-local again
+        train_t = training_time_s(cfg.timing, slowdown, n_valid)
+        upload_t = upload_time_s_from_shadow(cfg.network, pos,
+                                             cfg.model_bytes, up_shadow)
+        ok = completes_before_deadline(cfg.timing, train_t, upload_t)
+        selected = mask > 0
+        survivors = selected & ok & valid
+        n_straggler = jax.lax.psum((selected & ~ok & valid).sum(),
+                                   CLIENT_AXIS)
+        n_survivor = jax.lax.psum(survivors.sum(), CLIENT_AXIS)
+        stats = selection_stats(mask_g, ev_g)
+        return (pos, feats, evals, mask, survivors, n_straggler,
+                stats["n_selected"], n_survivor,
+                stats["mean_eval_selected"])
+
+    def s(*tail):
+        """Spec helper: prepend the (unsharded) seed axis when vmapped."""
+        return P(None, *tail) if seeds else P(*tail)
+
+    rep = P()
+    in_specs = (s(CLIENT_AXIS), s(CLIENT_AXIS), s(CLIENT_AXIS),
+                s(CLIENT_AXIS), s(CLIENT_AXIS),
+                s(CLIENT_AXIS, None, None, None),    # probe images
+                s(CLIENT_AXIS), s(CLIENT_AXIS),      # probe labels/seg
+                rep, rep, rep, rep,                  # counts, memberships
+                rep, rep, rep,                       # params, t_s, k_sel
+                P(CLIENT_AXIS),                      # pinned shadow
+                s(None, CLIENT_AXIS),                # cwnd loss field
+                s(CLIENT_AXIS))                      # upload shadow
+    out_specs = (s(CLIENT_AXIS), s(CLIENT_AXIS, None), s(CLIENT_AXIS),
+                 s(CLIENT_AXIS), s(CLIENT_AXIS),
+                 rep, rep, rep, rep)
+    body = core if not seeds else jax.vmap(
+        core, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0,
+                       None, 0, None, 0, 0))
+    sharded = shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs,
+                        check_rep=False)
+
+    def run(st: RoundStatics, params: Params, rnd: jax.Array,
+            sel_key: jax.Array, net_key: jax.Array):
+        sample_ax = 1 if seeds else 0
+        if st.probe_images.shape[sample_ax] % k != 0:
+            raise ValueError(
+                f"packed probe sample axis {st.probe_images.shape} not "
+                f"divisible by {k} client shards — build the simulation "
+                f"inside the mesh context so the probe packs per shard")
+        t_s = rnd.astype(jnp.float32) * cfg.timing.deadline_s
+        # per-round keys + global random fields, folded/drawn exactly as
+        # the unsharded prefix folds/draws them (see _prefix)
+        if seeds:
+            k_sel = jax.vmap(jax.random.fold_in, in_axes=(0, None))(
+                sel_key, rnd)
+            folded = jax.vmap(jax.random.fold_in, in_axes=(0, None))(
+                net_key, rnd)
+            knet = jax.vmap(jax.random.split)(folded)
+            loss_u = jax.vmap(lambda kk: cwnd_loss_fields(kk, n))(
+                knet[:, 0])
+            up_shadow = jax.vmap(lambda kk: jax.random.normal(kk, (n,)))(
+                knet[:, 1])
+        else:
+            k_sel = jax.random.fold_in(sel_key, rnd)
+            k_pred, k_upload = jax.random.split(
+                jax.random.fold_in(net_key, rnd))
+            loss_u = cwnd_loss_fields(k_pred, n)
+            up_shadow = jax.random.normal(k_upload, (n,))
+        pin_shadow = jnp.pad(pinned_channel_shadow(n), (0, pad))
+
+        ax = 1 if seeds else 0
+
+        def padc(x, value=0.0, axis=ax):
+            widths = [(0, 0)] * x.ndim
+            widths[axis] = (0, pad)
+            return jnp.pad(x, widths, constant_values=value)
+
+        out = sharded(
+            padc(st.x0), padc(st.speeds), padc(st.jitter_phase),
+            padc(st.slowdown, 1.0), padc(st.n_valid),
+            st.probe_images, st.probe_labels, st.probe_seg,
+            st.probe_counts, st.means, st.sigmas, st.level_centers,
+            params, t_s, k_sel, pin_shadow,
+            padc(loss_u, axis=loss_u.ndim - 1), padc(up_shadow))
+        pos, feats, evals, mask, survivors, n_strag, n_sel, n_surv, mev = out
+        cut = (lambda x: x[:, :n]) if seeds else (lambda x: x[:n])
+        return {"pos": cut(pos), "feats": cut(feats), "evals": cut(evals),
+                "mask": cut(mask), "survivors": cut(survivors),
+                "n_straggler": n_strag, "n_selected": n_sel,
+                "n_survivor": n_surv, "mean_eval_selected": mev}
+
+    return jax.jit(run)
+
+
+def selection_prefix_sharded(st: RoundStatics, params: Params,
+                             rnd: jax.Array, sel_key: jax.Array,
+                             net_key: jax.Array, *, cfg: StageConfig,
+                             mesh: Mesh) -> Dict[str, jax.Array]:
+    """``selection_prefix`` with the client axis partitioned over
+    ``mesh``'s ``clients`` axis — same signature, same output dict, same
+    masks bit-for-bit; requires the statics' probe packed for the mesh
+    (``FLSimulation`` built inside the mesh context does this)."""
+    return _sharded_prefix_fn(cfg, mesh, False)(st, params, rnd, sel_key,
+                                                net_key)
+
+
+def selection_prefix_seeds_sharded(st: RoundStatics, params: Params,
+                                   rnd: jax.Array, sel_keys: jax.Array,
+                                   net_keys: jax.Array, *, cfg: StageConfig,
+                                   mesh: Mesh) -> Dict[str, jax.Array]:
+    """``selection_prefix_seeds`` over a client mesh: one dispatch
+    evaluates S seeds' selection stages with every seed's client axis
+    sharded over the same devices."""
+    return _sharded_prefix_fn(cfg, mesh, True)(st, params, rnd, sel_keys,
+                                               net_keys)
+
+
+# -- sharded training stages ------------------------------------------------
+
+def cohort_bucket_sharded(k: int, shards: int) -> int:
+    """``cohort_bucket`` rounded up to a mesh multiple, so every device
+    trains an equal slice of the group's cohort (padding duplicates at
+    weight zero, exactly like the unsharded bucket)."""
+    return pad_to_shards(cohort_bucket(k), shards)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_group_trainer(mesh: Mesh, epochs: int, batch_size: int,
+                           steps_per_epoch: int, lr: float, prox_mu: float):
+    """One capacity group's shard_map'd trainer: each device runs
+    ``local_train_batch`` over its cohort shard and the weighted model
+    sum finishes with a cross-device psum (``fedavg_sums``) — the
+    ``(bucket, cap, ...)`` stack never materializes on one chip."""
+
+    def body(params, images, labels, n_valid, keys, w):
+        stacked, _ = local_train_batch(
+            params, images, labels, n_valid, keys, epochs=epochs,
+            batch_size=batch_size, steps_per_epoch=steps_per_epoch, lr=lr,
+            prox_mu=prox_mu)
+        return fedavg_sums(stacked, w, axis_name=CLIENT_AXIS)
+
+    c = P(CLIENT_AXIS)
+    sharded = shard_map(body, mesh, in_specs=(P(), c, c, c, c, c),
+                        out_specs=(P(), P()), check_rep=False)
+    return jax.jit(sharded)
+
+
+def train_group_cohort_sharded(params: Params, group: ClientGroup,
+                               steps_per_epoch: int, idx: np.ndarray,
+                               weights: np.ndarray, keys: jax.Array,
+                               mesh: Mesh, *, epochs: int, batch_size: int,
+                               lr: float, prox_mu: float
+                               ) -> Tuple[Params, jax.Array]:
+    """Dispatch one group's gathered cohort to the sharded trainer.
+
+    The host-side gather places each device's shard directly via
+    ``NamedSharding`` (``resolve_pspec`` with ``require=`` — the client
+    partition may never silently replicate), so only ``len(idx)/K``
+    clients' tensors are ever transferred to any one device.  Returns the
+    psum'd ``(weighted model sum, weight total)`` partial aggregates."""
+    rules = {CLIENT_AXIS: CLIENT_AXIS}
+    images = group.images[idx]
+    im_spec = resolve_pspec(mesh, rules, (CLIENT_AXIS,) + (None,) *
+                            (images.ndim - 1), images.shape,
+                            require=(CLIENT_AXIS,))
+    row_spec = resolve_pspec(mesh, rules, (CLIENT_AXIS,), (len(idx),),
+                             require=(CLIENT_AXIS,))
+
+    def put(a, spec):
+        return jax.device_put(a, NamedSharding(mesh, spec))
+
+    trainer = _sharded_group_trainer(mesh, epochs, batch_size,
+                                     steps_per_epoch, lr, prox_mu)
+    return trainer(params, put(images, im_spec),
+                   put(group.labels[idx], row_spec),
+                   put(group.n_valid[idx], row_spec),
+                   put(np.asarray(keys), row_spec),
+                   put(weights.astype(np.float32), row_spec))
+
+
+def train_groups_sharded(params: Params, groups: Sequence[ClientGroup],
+                         group_steps: Sequence[int], survivors: np.ndarray,
+                         keys: jax.Array, mesh: Mesh, *, epochs: int,
+                         batch_size: int, lr: float, prox_mu: float
+                         ) -> Optional[Tuple[Params, jax.Array]]:
+    """Mesh-sharded ``train_groups``: per capacity group, each device
+    trains its shard of the surviving cohort; the Eq. 2 numerator/
+    denominator accumulate across groups and devices (psum inside the
+    trainer, plain adds across groups).  Returns the unnormalized
+    ``(sum_i w_i model_i, sum_i w_i)`` or None for an empty round."""
+    if not survivors.any():
+        return None
+    shards = mesh_client_shards(mesh)
+    num_tot, den_tot = None, None
+    for gi, g in enumerate(groups):
+        cohort = np.where(survivors[g.client_ids])[0]       # group-local
+        k = len(cohort)
+        if k == 0:
+            continue                         # empty cohort: skip group
+        bucket = cohort_bucket_sharded(k, shards)
+        idx = np.concatenate([cohort, np.full(bucket - k, cohort[0])])
+        w = g.n_valid[idx].astype(np.float32)
+        w[k:] = 0.0                          # padding duplicates drop out
+        num, den = train_group_cohort_sharded(
+            params, g, group_steps[gi], idx, w,
+            keys[jnp.asarray(g.client_ids[idx])], mesh, epochs=epochs,
+            batch_size=batch_size, lr=lr, prox_mu=prox_mu)
+        num_tot = num if num_tot is None else jax.tree.map(jnp.add,
+                                                           num_tot, num)
+        den_tot = den if den_tot is None else den_tot + den
+    if num_tot is None:
+        return None
+    return num_tot, den_tot
+
+
+def aggregate_sharded(params: Params,
+                      trained: Optional[Tuple[Params, jax.Array]]) -> Params:
+    """Finish Eq. 2 from the sharded trainer's psum'd partial sums; an
+    empty round returns the global model unchanged."""
+    if trained is None:
+        return params
+    num, den = trained
+    inv = 1.0 / jnp.maximum(den, 1e-9)
+    return jax.tree.map(lambda s_leaf, p: (s_leaf * inv).astype(p.dtype),
+                        num, params)

@@ -50,6 +50,14 @@ Steps 1-4 and 6 (probe -> fuzzy evaluate -> select -> deadline) are the
 PRNG bases and crosses the survivor mask to the host exactly once, at
 the cohort gather.  The sweep harness (``repro.launch.sweep``) drives
 the same prefix vmapped across seeds.
+
+Constructed inside an active ``logical_sharding`` context whose mesh has
+a live ``clients`` axis (the launchers' ``--mesh clients=K``), the
+simulation partitions the in-round client axis over that mesh: the
+prefix runs as ``selection_prefix_sharded`` (same masks bit-for-bit),
+the probe packs one sample region per shard, and the batched engine
+trains each capacity group through the shard_map'd grouped trainer with
+a cross-device psum'd FedAvg (``train_groups_sharded``).
 """
 from __future__ import annotations
 
@@ -120,6 +128,11 @@ class FLSimulation:
             raise ValueError(f"engine must be one of {ENGINES}: "
                              f"{cfg.engine!r}")
         self.cfg = cfg
+        # a live ("clients",) mesh axis partitions the in-round client
+        # axis (sharded prefix + grouped trainer); captured at
+        # construction so the probe packs one sample region per shard
+        self.client_mesh = pipeline.active_client_mesh()
+        self.n_shards = pipeline.mesh_client_shards(self.client_mesh)
         rng = np.random.default_rng(cfg.seed)
         images, labels = make_dataset(cfg.samples_per_class, seed=cfg.seed)
         (tr_i, tr_l), (te_i, te_l) = train_test_split(images, labels,
@@ -212,35 +225,64 @@ class FLSimulation:
     _PROBE_BATCH = 128
 
     def _build_packed_probe(self) -> None:
-        """Pack every client's valid probe samples into one flat tensor.
+        """Pack every client's valid probe samples into one flat tensor,
+        client-aligned and (when a client mesh is active) shard-regioned.
 
         Client membership is static across rounds (the partition never
         changes), so the packing is computed once; each round's probe is
-        then a single fused forward pass with zero padding-row FLOPs.
-        Clients are packed in global-id order regardless of their
-        capacity group."""
+        then a single fused forward pass.  Each client's samples are
+        padded to a whole number of probe batches (sentinel rows carry
+        ``seg == n``, the overflow lane), so a batch never spans two
+        clients; clients are then grouped into ``n_shards`` equal-length
+        contiguous regions — one per mesh shard, padded to the longest
+        with sentinel batches — which makes the sample axis exactly
+        partitionable over the client mesh.  Sentinel rows only ever add
+        exact zeros to real clients' Eq. 7 loss lanes, so the per-client
+        losses are bitwise identical for every shard count (the
+        sharded-vs-single-device mask parity rests on this).  The
+        alignment costs probe FLOPs — up to ``_PROBE_BATCH - 1`` sentinel
+        rows per client even unsharded, vs the pre-mesh tight pack — a
+        deliberate trade: the probe is one forward pass per round and
+        the alignment is what keeps masks reproducible across meshes."""
         probe = min(self.cfg.probe_samples, self.cap)
         take = np.minimum(self.n_valid, probe).astype(np.int64)
-        ims, lbs = [], []
-        for i in range(self.n):
-            gi, li = self._slot[i]
-            g = self.groups[gi]
-            ims.append(g.images[li, :take[i]])
-            lbs.append(g.labels[li, :take[i]])
-        flat_im = np.concatenate(ims)
-        flat_lb = np.concatenate(lbs)
-        seg = np.repeat(np.arange(self.n), take)
-        pad = (-len(seg)) % self._PROBE_BATCH
-        if pad:
-            flat_im = np.concatenate(
-                [flat_im, np.zeros((pad,) + flat_im.shape[1:],
-                                   flat_im.dtype)])
-            flat_lb = np.concatenate([flat_lb,
-                                      np.zeros(pad, flat_lb.dtype)])
-            seg = np.concatenate([seg, np.full(pad, self.n)])
-        self._probe_images = jnp.asarray(flat_im)
-        self._probe_labels = jnp.asarray(flat_lb)
-        self._probe_seg = jnp.asarray(seg.astype(np.int32))
+        batch = self._PROBE_BATCH
+        shard_clients = pipeline.pad_to_shards(self.n,
+                                               self.n_shards) // self.n_shards
+        im_shape = self.groups[0].images.shape[2:]
+        im_dtype = self.groups[0].images.dtype
+        lb_dtype = self.groups[0].labels.dtype
+        regions = []
+        for d in range(self.n_shards):
+            ims, lbs, segs = [], [], []
+            for i in range(d * shard_clients,
+                           min((d + 1) * shard_clients, self.n)):
+                gi, li = self._slot[i]
+                g = self.groups[gi]
+                t = int(take[i])
+                ims.append(g.images[li, :t])
+                lbs.append(g.labels[li, :t])
+                segs.append(np.full(t, i))
+                pad = (-t) % batch
+                if pad:                      # align the client to batches
+                    ims.append(np.zeros((pad,) + im_shape, im_dtype))
+                    lbs.append(np.zeros(pad, lb_dtype))
+                    segs.append(np.full(pad, self.n))
+            regions.append(
+                (np.concatenate(ims) if ims
+                 else np.zeros((0,) + im_shape, im_dtype),
+                 np.concatenate(lbs) if lbs else np.zeros(0, lb_dtype),
+                 np.concatenate(segs) if segs else np.zeros(0, np.int64)))
+        length = max(batch, max(r[0].shape[0] for r in regions))
+        flat_im, flat_lb, seg = [], [], []
+        for im, lb, sg in regions:           # equalize region lengths
+            pad = length - im.shape[0]
+            flat_im += [im, np.zeros((pad,) + im_shape, im_dtype)]
+            flat_lb += [lb, np.zeros(pad, lb_dtype)]
+            seg += [sg, np.full(pad, self.n)]
+        self._probe_images = jnp.asarray(np.concatenate(flat_im))
+        self._probe_labels = jnp.asarray(np.concatenate(flat_lb))
+        self._probe_seg = jnp.asarray(np.concatenate(seg).astype(np.int32))
         self._probe_counts = jnp.asarray(take.astype(np.int32))
 
     def _round_keys(self, rnd: int) -> jax.Array:
@@ -265,6 +307,10 @@ class FLSimulation:
             self.statics,
             means=jnp.asarray(ecfg.means, jnp.float32),
             sigmas=jnp.asarray(ecfg.sigmas, jnp.float32))
+        if self.client_mesh is not None:
+            return pipeline.selection_prefix_sharded(
+                st, self.params, jnp.int32(rnd), self.key,
+                self.net_key, cfg=self.stage_cfg, mesh=self.client_mesh)
         return pipeline.selection_prefix(
             st, self.params, jnp.int32(rnd), self.key,
             self.net_key, cfg=self.stage_cfg)
@@ -329,6 +375,12 @@ class FLSimulation:
     # cohort bucketing lives with the staged training stage now
     _bucket = staticmethod(pipeline.cohort_bucket)
 
+    def _bucket_n(self, k: int) -> int:
+        """Cohort bucket for ``k`` survivors, rounded to a mesh multiple
+        when the client axis is sharded (every device gets an equal
+        cohort slice)."""
+        return pipeline.cohort_bucket_sharded(k, self.n_shards)
+
     def warmup(self, buckets=None) -> None:
         """Pre-compile the batched trainer for the given cohort bucket
         sizes in every capacity group (the jit cache persists across
@@ -340,13 +392,23 @@ class FLSimulation:
             return
         cfg = self.cfg
         if buckets is None:
-            buckets = sorted({2, 4, 6, 8,
-                              self._bucket(min(cfg.n_clients_central,
+            buckets = sorted({self._bucket_n(k) for k in
+                              (2, 4, 6, 8, min(cfg.n_clients_central,
                                                self.n))})
         keys = self._round_keys(0)
         for gi, g in enumerate(self.groups):
-            for b in sorted({min(b, self._bucket(g.size)) for b in buckets}):
+            for b in sorted({min(b, self._bucket_n(g.size))
+                             for b in buckets}):
                 idx = np.zeros(b, np.int64)
+                if self.client_mesh is not None:
+                    pipeline.train_group_cohort_sharded(
+                        self.params, g, self._group_steps[gi], idx,
+                        np.zeros(b, np.float32),
+                        keys[jnp.asarray(g.client_ids[idx])],
+                        self.client_mesh, epochs=cfg.local_epochs,
+                        batch_size=cfg.batch_size, lr=cfg.lr,
+                        prox_mu=cfg.prox_mu)
+                    continue
                 local_train_batch(
                     self.params, jnp.asarray(g.images[idx]),
                     jnp.asarray(g.labels[idx]),
@@ -363,8 +425,17 @@ class FLSimulation:
         cohort, the mask folded into the FedAvg weights (Eq. 2).
         Stragglers are dropped at the gather (their update is discarded
         either way; at IoV scale their local SGD FLOPs are not).  An
-        empty round (or per-group cohort) is a no-op broadcast."""
+        empty round (or per-group cohort) is a no-op broadcast.  Under a
+        client mesh each device trains its shard of every group's cohort
+        and FedAvg finishes with a cross-device psum."""
         cfg = self.cfg
+        if self.client_mesh is not None:
+            trained = pipeline.train_groups_sharded(
+                self.params, self.groups, self._group_steps, survivors,
+                keys, self.client_mesh, epochs=cfg.local_epochs,
+                batch_size=cfg.batch_size, lr=cfg.lr, prox_mu=cfg.prox_mu)
+            self.params = pipeline.aggregate_sharded(self.params, trained)
+            return
         trained = pipeline.train_groups(
             self.params, self.groups, self._group_steps, survivors, keys,
             epochs=cfg.local_epochs, batch_size=cfg.batch_size, lr=cfg.lr,

@@ -53,10 +53,25 @@ def wkv6(r, k, v, w, u, s0, impl: Optional[str] = None
 def fuzzy_eval(x, means, sigmas, rule_table: np.ndarray,
                rule_levels: np.ndarray, level_centers,
                impl: Optional[str] = None,
-               normalize: bool = False) -> jax.Array:
+               normalize: bool = False,
+               col_maxima=None) -> jax.Array:
     """``normalize=True`` accepts raw feature columns and applies Eq. 8
     per-column max-scaling inside the kernel (both impls) — the staged
-    ``evaluate`` stage feeds raw [SQ, TA, CC, LF]."""
+    ``evaluate`` stage feeds raw [SQ, TA, CC, LF].
+
+    ``col_maxima`` (only meaningful with ``normalize=True``) supplies the
+    per-column maxima externally instead of computing them over ``x`` —
+    the mesh-sharded prefix pmax-reduces the maxima across client
+    shards and passes them here, so each shard normalizes against the
+    *global* Eq. 8 denominator.  The scaling ops match the jnp/ref
+    in-kernel path exactly (``x / maxima``), so results are bitwise-equal
+    to it when ``col_maxima`` equals ``x.max(axis=0)`` of the full
+    batch; the Pallas kernel normalizes via a reciprocal multiply and
+    may differ in the last ulp."""
+    if normalize and col_maxima is not None:
+        maxima = jnp.maximum(col_maxima, 1e-9)
+        x = jnp.clip(x / maxima, 0.0, 1.0)
+        normalize = False
     m = _impl(impl)
     if m == "pallas":
         from repro.kernels.fuzzy_eval import fuzzy_eval_pallas

@@ -1,8 +1,11 @@
-from repro.launch.mesh import (CHIPS_PER_POD, HBM_BW, HBM_BYTES_PER_CHIP,
-                               ICI_BW_PER_LINK, PEAK_FLOPS_BF16,
-                               make_debug_mesh, make_production_mesh)
+from repro.launch.mesh import (CHIPS_PER_POD, CLIENT_AXIS, HBM_BW,
+                               HBM_BYTES_PER_CHIP, ICI_BW_PER_LINK,
+                               PEAK_FLOPS_BF16, ensure_host_device_count,
+                               make_clients_mesh, make_debug_mesh,
+                               make_production_mesh)
 
 __all__ = [
-    "CHIPS_PER_POD", "HBM_BW", "HBM_BYTES_PER_CHIP", "ICI_BW_PER_LINK",
-    "PEAK_FLOPS_BF16", "make_debug_mesh", "make_production_mesh",
+    "CHIPS_PER_POD", "CLIENT_AXIS", "HBM_BW", "HBM_BYTES_PER_CHIP",
+    "ICI_BW_PER_LINK", "PEAK_FLOPS_BF16", "ensure_host_device_count",
+    "make_clients_mesh", "make_debug_mesh", "make_production_mesh",
 ]

@@ -3,6 +3,16 @@
 Usage:
   PYTHONPATH=src python -m repro.launch.fl_sim --scheme dcs --rounds 10
   PYTHONPATH=src python -m repro.launch.fl_sim --scheme all --fast
+  PYTHONPATH=src python -m repro.launch.fl_sim --mesh clients=8 --rounds 5
+
+``--mesh clients=K`` partitions the in-round client axis over K devices:
+the selection prefix runs shard_map'd (``selection_prefix_sharded``) and
+the grouped trainer splits every cohort across the mesh with a psum'd
+FedAvg.  On CPU the K devices are emulated host devices — the launcher
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=K`` before the
+jax backend initializes (heavy imports are deferred into ``main`` for
+exactly this reason); if the backend is already live, it raises with the
+relaunch recipe instead of quietly running single-device.
 """
 from __future__ import annotations
 
@@ -10,15 +20,13 @@ import argparse
 import json
 import time
 
-from repro.fl.partition import PartitionConfig
-from repro.fl.mobility import MobilityConfig
-from repro.fl.rounds import FLSimConfig, FLSimulation
-
 SCHEMES = ("dcs", "ccs-fuzzy", "random")
 
 
-def fast_config(scheme: str, **kw) -> FLSimConfig:
+def fast_config(scheme: str, **kw):
     """CPU-budget profile: same structure, smaller local datasets."""
+    from repro.fl.partition import PartitionConfig
+    from repro.fl.rounds import FLSimConfig
     part = PartitionConfig(big_quantity=kw.pop("big_quantity", 300),
                            small_quantity=45,
                            classes_per_client=kw.pop("classes_per_client", 9))
@@ -28,8 +36,9 @@ def fast_config(scheme: str, **kw) -> FLSimConfig:
                        n_rounds=kw.pop("n_rounds", 10), **kw)
 
 
-def paper_config(scheme: str, **kw) -> FLSimConfig:
+def paper_config(scheme: str, **kw):
     """Table 3 profile (expensive on CPU)."""
+    from repro.fl.rounds import FLSimConfig
     return FLSimConfig(scheme=scheme, local_epochs=30, n_rounds=50,
                        deadline_s=20.0, **kw)
 
@@ -43,29 +52,44 @@ def main(argv=None) -> int:
     ap.add_argument("--classes-per-client", type=int, default=9)
     ap.add_argument("--distribution", choices=("uniform", "extreme"),
                     default="uniform")
+    ap.add_argument("--mesh", default=None, metavar="clients=K",
+                    help="partition the in-round client axis over K "
+                         "devices (CPU: emulated host devices)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    schemes = SCHEMES if args.scheme == "all" else (args.scheme,)
-    results = {}
-    for scheme in schemes:
-        mk = paper_config if args.paper_profile else fast_config
-        cfg = mk(scheme, n_rounds=args.rounds,
-                 classes_per_client=args.classes_per_client, seed=args.seed) \
-            if not args.paper_profile else mk(scheme, seed=args.seed)
-        cfg.mobility = MobilityConfig(distribution=args.distribution,
-                                      seed=args.seed)
-        sim = FLSimulation(cfg)
-        t0 = time.time()
-        hist = sim.run(args.rounds)
-        dt = time.time() - t0
-        accs = [h["accuracy"] for h in hist]
-        nsel = sum(h["n_selected"] for h in hist) / len(hist)
-        print(f"[fl_sim] {scheme}: final acc {accs[-1]:.3f} "
-              f"(best {max(accs):.3f}), avg selected {nsel:.2f}, "
-              f"{dt:.0f}s", flush=True)
-        results[scheme] = hist
+    # --mesh may force emulated host devices, which only works before the
+    # jax backend initializes — so the mesh context comes first and the
+    # simulator imports stay inside main
+    from repro.launch.mesh import client_mesh_context
+    with client_mesh_context(args.mesh) as mesh:
+        from repro.fl.mobility import MobilityConfig
+        from repro.fl.rounds import FLSimulation
+        if mesh is not None:
+            print(f"[fl_sim] client mesh: {dict(mesh.shape)} over "
+                  f"{mesh.devices.size} devices", flush=True)
+
+        schemes = SCHEMES if args.scheme == "all" else (args.scheme,)
+        results = {}
+        for scheme in schemes:
+            mk = paper_config if args.paper_profile else fast_config
+            cfg = mk(scheme, n_rounds=args.rounds,
+                     classes_per_client=args.classes_per_client,
+                     seed=args.seed) \
+                if not args.paper_profile else mk(scheme, seed=args.seed)
+            cfg.mobility = MobilityConfig(distribution=args.distribution,
+                                          seed=args.seed)
+            sim = FLSimulation(cfg)
+            t0 = time.time()
+            hist = sim.run(args.rounds)
+            dt = time.time() - t0
+            accs = [h["accuracy"] for h in hist]
+            nsel = sum(h["n_selected"] for h in hist) / len(hist)
+            print(f"[fl_sim] {scheme}: final acc {accs[-1]:.3f} "
+                  f"(best {max(accs):.3f}), avg selected {nsel:.2f}, "
+                  f"{dt:.0f}s", flush=True)
+            results[scheme] = hist
     if args.out:
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1)

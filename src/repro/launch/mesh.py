@@ -1,13 +1,24 @@
-"""Production mesh construction (TPU v5e pods; 256 chips/pod).
+"""Production mesh construction (TPU v5e pods; 256 chips/pod) plus the
+FL launchers' ``clients`` mesh.
 
 Defined as functions — importing this module never touches jax device
 state.  The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count
-=512 *before* any jax import to build these meshes on CPU.
+=512 *before* any jax import to build these meshes on CPU; the FL
+launchers (``fl_sim``/``sweep`` with ``--mesh clients=K``) do the same
+through ``ensure_host_device_count`` before their first jax operation.
 """
 from __future__ import annotations
 
+import contextlib
+import os
+from typing import Dict, Optional
+
+import numpy as np
+
 import jax
 from jax.sharding import Mesh
+
+from repro.sharding.api import CLIENT_AXIS
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -19,8 +30,86 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 def make_debug_mesh(n_devices: int = 0, model: int = 1) -> Mesh:
     """Small mesh over whatever devices exist (tests)."""
     n = n_devices or len(jax.devices())
-    assert n % model == 0
+    if model < 1 or n % model != 0:
+        raise ValueError(
+            f"cannot build a debug mesh: {n} devices not divisible by "
+            f"model={model}")
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_clients_mesh(n_shards: int = 0) -> Mesh:
+    """1-D ``("clients",)`` mesh over the first ``n_shards`` local devices
+    — the launcher's ``--mesh clients=K``.  ``0`` takes every device."""
+    devices = jax.devices()
+    n = n_shards or len(devices)
+    if n < 1:
+        raise ValueError(f"clients mesh needs >= 1 shard, got {n}")
+    if n > len(devices):
+        raise ValueError(
+            f"clients mesh wants {n} devices but only {len(devices)} "
+            f"exist; on CPU, relaunch with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n}")
+    return Mesh(np.asarray(devices[:n]), (CLIENT_AXIS,))
+
+
+def parse_mesh_spec(spec: str) -> Dict[str, int]:
+    """``"clients=8"`` (comma-separable) -> ``{"clients": 8}``."""
+    out: Dict[str, int] = {}
+    for part in spec.split(","):
+        name, _, val = part.partition("=")
+        name = name.strip()
+        if not name or not val:
+            raise ValueError(f"bad mesh axis {part!r} (want axis=N)")
+        try:
+            out[name] = int(val)
+        except ValueError:
+            raise ValueError(f"bad mesh extent {val!r} for axis {name!r}")
+    return out
+
+
+@contextlib.contextmanager
+def client_mesh_context(spec: Optional[str]):
+    """``--mesh`` handling shared by the FL launchers: ``"clients=K"``
+    builds the K-way clients mesh (forcing K emulated CPU host devices
+    when the backend has not initialized yet) and activates it plus the
+    logical sharding rules for every simulation constructed inside.
+    ``None``/empty is a no-op single-device context."""
+    if not spec:
+        yield None
+        return
+    axes = parse_mesh_spec(spec)
+    unknown = sorted(set(axes) - {CLIENT_AXIS})
+    if unknown:
+        raise ValueError(f"unknown mesh axes {unknown} (the FL launchers "
+                         f"only partition {CLIENT_AXIS!r})")
+    k = axes.get(CLIENT_AXIS, 1)
+    if k > 1:
+        ensure_host_device_count(k)
+    mesh = make_clients_mesh(k)
+    from repro.sharding.api import DEFAULT_RULES, logical_sharding
+    with mesh, logical_sharding(mesh, DEFAULT_RULES):
+        yield mesh
+
+
+def ensure_host_device_count(n: int) -> None:
+    """Best-effort CPU host-device emulation for ``--mesh clients=K``.
+
+    Appends ``--xla_force_host_platform_device_count=N`` to XLA_FLAGS —
+    effective only if the jax backend has not initialized yet, which is
+    why the launchers call this before their first jax operation.  If the
+    devices still do not materialize (backend already live, or a real
+    accelerator platform), raises with the relaunch recipe instead of
+    quietly running single-device."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip())
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"requested {n} devices but only {len(jax.devices())} "
+            f"materialized (jax backend already initialized?); set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} in the "
+            f"environment before launching")
 
 
 # v5e hardware constants for the roofline (per chip / per link)

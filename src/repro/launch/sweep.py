@@ -23,6 +23,13 @@ seed) simulation.  The harness exploits the staged round pipeline
   from worker *processes* (``--workers N``, spawn-based).  On a single
   CPU device with one worker this degrades to serial execution — the
   correctness baseline.
+- **the client axis is meshed** (``--mesh clients=K``): inside the
+  activated clients mesh every cell's *in-round* client axis is
+  partitioned across the K devices — the seed-vmapped prefix dispatches
+  as ``selection_prefix_seeds_sharded`` and the grouped trainer psums
+  its FedAvg across shards.  The whole mesh is then ONE placement
+  domain (``sweep_devices`` collapses to a single entry), and worker
+  processes each rebuild the same mesh from the spec.
 
 Output: ONE tidy CSV, one row per (cell, round), with per-seed metrics
 plus mean +/- std columns aggregated across the group's seeds (constant
@@ -123,14 +130,20 @@ def run_seed_group(scheme: str, classes_per_client: int, distribution: str,
     sel_keys = jnp.stack([s.key for s in sims])
     net_keys = jnp.stack([s.net_key for s in sims])
 
+    mesh = pipeline.active_client_mesh()
     rows: List[Dict] = []
     for r in range(rounds):
         if use_vmap:
             params = jax.tree.map(lambda *xs: jnp.stack(xs),
                                   *[s.params for s in sims])
-            outs = pipeline.selection_prefix_seeds(
-                stacked_st, params, jnp.int32(r), sel_keys, net_keys,
-                cfg=cfg0)
+            if mesh is not None:
+                outs = pipeline.selection_prefix_seeds_sharded(
+                    stacked_st, params, jnp.int32(r), sel_keys, net_keys,
+                    cfg=cfg0, mesh=mesh)
+            else:
+                outs = pipeline.selection_prefix_seeds(
+                    stacked_st, params, jnp.int32(r), sel_keys, net_keys,
+                    cfg=cfg0)
             states = [jax.tree.map(lambda x, i=i: x[i], outs)
                       for i in range(len(sims))]
         else:
@@ -187,26 +200,34 @@ def rows_to_csv(rows: List[Dict]) -> str:
 
 
 def _run_group_worker(args: Tuple) -> List[Dict]:
-    """Top-level (picklable) worker: one cell group, serial in-process."""
-    scheme, classes, dist, seeds, rounds, cfg_fn, vmap_prefix = args
-    return run_seed_group(scheme, classes, dist, seeds, rounds,
-                          cfg_fn=cfg_fn, vmap_prefix=vmap_prefix)
+    """Top-level (picklable) worker: one cell group, serial in-process.
+    ``mesh_spec`` (a ``--mesh`` string; Mesh objects don't pickle)
+    rebuilds the client mesh inside the worker's own jax runtime."""
+    scheme, classes, dist, seeds, rounds, cfg_fn, vmap_prefix, \
+        mesh_spec = args
+    from repro.launch.mesh import client_mesh_context
+    with client_mesh_context(mesh_spec):
+        return run_seed_group(scheme, classes, dist, seeds, rounds,
+                              cfg_fn=cfg_fn, vmap_prefix=vmap_prefix)
 
 
 def sweep(schemes: Sequence[str], classes_list: Sequence[int],
           distributions: Sequence[str], seeds: Sequence[int], rounds: int,
           cfg_fn: ConfigFn = fast_cell_config, vmap_prefix: bool = True,
-          workers: int = 1,
+          workers: int = 1, mesh_spec: Optional[str] = None,
           log: Optional[Callable[[str], None]] = None) -> List[Dict]:
     """Run the full grid and return aggregated tidy rows.
 
     Cell groups are placed round-robin over ``sweep_devices()`` (serial
-    fallback on one device); ``workers > 1`` additionally fans groups
+    fallback on one device; a clients mesh is one placement domain);
+    ``workers > 1`` additionally fans groups
     out over spawn-based processes (each worker owns its device runtime,
     so the device placement is left to the workers; ``cfg_fn`` crosses
     the process boundary by reference, so it must be a module-level
     function — a closure fails loudly at submission, never silently
-    switching profiles)."""
+    switching profiles).  ``mesh_spec`` crosses as the ``--mesh`` string
+    and is activated inside each worker (the parent's forced-device env
+    is inherited by the spawned children)."""
     log = log or (lambda s: None)
     groups: List[Group] = [(s, c, d) for s in schemes for c in classes_list
                            for d in distributions]
@@ -214,7 +235,8 @@ def sweep(schemes: Sequence[str], classes_list: Sequence[int],
     if workers > 1:
         import multiprocessing as mp
         from concurrent.futures import ProcessPoolExecutor
-        jobs = [(s, c, d, tuple(seeds), rounds, cfg_fn, vmap_prefix)
+        jobs = [(s, c, d, tuple(seeds), rounds, cfg_fn, vmap_prefix,
+                 mesh_spec)
                 for (s, c, d) in groups]
         with ProcessPoolExecutor(
                 max_workers=workers,
@@ -259,6 +281,9 @@ def main(argv=None) -> int:
                     help="worker processes for cell groups (1 = in-process)")
     ap.add_argument("--no-vmap", action="store_true",
                     help="disable the seed-vmapped selection prefix")
+    ap.add_argument("--mesh", default=None, metavar="clients=K",
+                    help="partition every cell's in-round client axis "
+                         "over K devices (CPU: emulated host devices)")
     ap.add_argument("--out", default="sweep.csv")
     args = ap.parse_args(argv)
 
@@ -278,10 +303,16 @@ def main(argv=None) -> int:
     cfg_fn = paper_cell_config if args.paper_profile else fast_cell_config
 
     t0 = time.time()
-    rows = sweep(schemes, classes_list, distributions,
-                 seeds=range(args.seeds), rounds=args.rounds, cfg_fn=cfg_fn,
-                 vmap_prefix=not args.no_vmap, workers=args.workers,
-                 log=lambda s: print(s, flush=True))
+    from repro.launch.mesh import client_mesh_context
+    with client_mesh_context(args.mesh) as mesh:
+        if mesh is not None:
+            print(f"[sweep] client mesh: {dict(mesh.shape)} over "
+                  f"{mesh.devices.size} devices", flush=True)
+        rows = sweep(schemes, classes_list, distributions,
+                     seeds=range(args.seeds), rounds=args.rounds,
+                     cfg_fn=cfg_fn, vmap_prefix=not args.no_vmap,
+                     workers=args.workers, mesh_spec=args.mesh,
+                     log=lambda s: print(s, flush=True))
     csv_text = rows_to_csv(rows)
     with open(args.out, "w") as f:
         f.write(csv_text)

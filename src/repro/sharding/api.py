@@ -4,19 +4,29 @@ Model code annotates intermediates with *logical* axis names
 (``constrain(x, ("batch", None, "embed"))``).  The launcher activates a
 mesh + logical->physical rules; without an active context (CPU unit tests)
 ``constrain`` is a no-op.  Axes whose dimension is not divisible by the
-assigned mesh axes are silently dropped (replicated) — uneven sharding is
-never requested.
+assigned mesh axes are dropped (replicated) — uneven sharding is never
+requested — and every drop is logged with the axis name so replication is
+never silent.  Callers that *require* a partition (the in-round client
+axis of ``fl/pipeline.py``) pass ``require=`` to ``resolve_pspec`` and
+get a ``ValueError`` instead of a replicated fallback.
 """
 from __future__ import annotations
 
 import contextlib
+import logging
 import threading
-from typing import Dict, Optional, Sequence, Tuple, Union
+from typing import Collection, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 AxisAssign = Union[None, str, Tuple[str, ...]]
+
+# the mesh axis the FL round pipeline partitions its client dimension
+# over — single source of truth for launch/mesh.py and fl/pipeline.py
+CLIENT_AXIS = "clients"
+
+logger = logging.getLogger(__name__)
 
 _state = threading.local()
 
@@ -53,13 +63,27 @@ def _axis_size(mesh: Mesh, assign: AxisAssign) -> int:
 
 def resolve_pspec(mesh: Mesh, rules: Dict[str, AxisAssign],
                   logical: Sequence[Optional[str]],
-                  shape: Sequence[int]) -> P:
-    """Logical spec -> PartitionSpec, dropping non-divisible axes."""
+                  shape: Sequence[int],
+                  require: Collection[str] = ()) -> P:
+    """Logical spec -> PartitionSpec, dropping non-divisible axes.
+
+    Every dropped (replicated) axis is logged: ``debug`` when the rule
+    resolves to no live mesh axis (size-1 or absent — replication is the
+    intended outcome), ``warning`` when the dimension is simply not
+    divisible by the assigned mesh extent (the surprising case that used
+    to be silent).  Logical axes listed in ``require`` raise a
+    ``ValueError`` instead of falling back to replication — the client
+    partition of the sharded round pipeline must never quietly collapse
+    onto one device."""
     out = []
     used = set()
     for dim, name in zip(shape, logical):
         assign = rules.get(name) if name else None
         if assign is None:
+            if name and name in require:
+                raise ValueError(
+                    f"logical axis {name!r} (dim {dim}) is required to be "
+                    f"sharded but has no rule mapping it to a mesh axis")
             out.append(None)
             continue
         names = (assign,) if isinstance(assign, str) else tuple(assign)
@@ -67,7 +91,25 @@ def resolve_pspec(mesh: Mesh, rules: Dict[str, AxisAssign],
         size = 1
         for a in names:
             size *= mesh.shape[a]
-        if not names or size == 1 or dim % size != 0:
+        if not names or size == 1:
+            if name in require:
+                raise ValueError(
+                    f"logical axis {name!r} (dim {dim}) is required to be "
+                    f"sharded but its assigned mesh axes {assign!r} are "
+                    f"absent or size 1 on mesh {dict(mesh.shape)}")
+            logger.debug("replicating logical axis %r (dim %d): mesh "
+                         "axes %r absent or size 1", name, dim, assign)
+            out.append(None)
+            continue
+        if dim % size != 0:
+            if name in require:
+                raise ValueError(
+                    f"logical axis {name!r} has dim {dim}, not divisible "
+                    f"by mesh extent {size} of {names!r} — pad the axis "
+                    f"to a mesh multiple instead of replicating")
+            logger.warning("replicating logical axis %r: dim %d not "
+                           "divisible by mesh extent %d of %r",
+                           name, dim, size, names)
             out.append(None)
             continue
         used.update(names)
@@ -117,9 +159,17 @@ def sweep_devices() -> Sequence[jax.Device]:
     Inside an active ``logical_sharding`` context the mesh's device list
     is the placement domain; otherwise every local device is.  A
     single-CPU host returns one device — the sweep harness falls back to
-    serial execution in that case."""
+    serial execution in that case.
+
+    A mesh with a live ``clients`` axis partitions *within* each round
+    (the mesh-sharded selection prefix / grouped trainer), so the whole
+    mesh is ONE placement domain: every sweep cell uses all of its
+    devices, and round-robin placement over the individual devices would
+    fight the in-round partition.  Such a mesh returns a single entry."""
     mesh = current_mesh()
     if mesh is not None:
+        if dict(mesh.shape).get(CLIENT_AXIS, 1) > 1:
+            return [mesh.devices.flat[0]]
         return list(mesh.devices.flat)
     return list(jax.devices())
 
@@ -135,4 +185,5 @@ DEFAULT_RULES: Dict[str, AxisAssign] = {
     "capacity": "data",     # MoE dispatch-buffer capacity dim
     "tokens": ("pod", "data"),
     "kv_seq": "data",
+    CLIENT_AXIS: CLIENT_AXIS,   # FL in-round client axis (launch --mesh)
 }
