@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fuzzy import FuzzyEvaluator
+from repro.core.rules import build_rule_table
 from repro.core.selection import dcs_select
 from repro.kernels import ops as kops
 
@@ -50,6 +51,90 @@ def bench_neighbor_elect() -> List[str]:
                                              top_m=2, e_tau=30.0))
         us = _time(fn, pos, evl)
         rows.append(f"neighbor_elect_jnp_N={n},{us:.1f},us_per_call")
+    return rows
+
+
+def bench_probe_fuzzy() -> List[str]:
+    """Fused probe->evaluate smoke (ISSUE 5): the jnp fast path and the
+    interpret-mode Pallas kernel on a small packed fleet.  The
+    interpret-mode number is a correctness-path cost, not TPU time; the
+    jnp number is the CPU fast path the prefix actually runs."""
+    from repro.configs.mnist_cnn import CONFIG as CNN_CFG
+    from repro.models.cnn import init_cnn
+
+    rows = []
+    n, per = 16, 24
+    s = n * per
+    rng = np.random.default_rng(0)
+    images = jnp.asarray(rng.normal(size=(s, 28, 28, 1)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 10, s).astype(np.int32))
+    seg = jnp.asarray(np.repeat(np.arange(n), per).astype(np.int32))
+    counts = jnp.asarray(np.full(n, per, np.int32))
+    aux = jnp.asarray(np.abs(rng.normal(size=(n, 3))).astype(np.float32))
+    params = init_cnn(jax.random.PRNGKey(0), CNN_CFG)
+    ev = FuzzyEvaluator()
+    table, levels = build_rule_table()
+    means = jnp.asarray(ev.cfg.means, jnp.float32)
+    sigmas = jnp.asarray(ev.cfg.sigmas, jnp.float32)
+    centers = jnp.asarray(ev.level_centers, jnp.float32)
+
+    for impl in ("jnp", "pallas"):
+        fn = jax.jit(lambda p, im, lb, sg, ct, ax, i=impl: kops.probe_fuzzy(
+            p, im, lb, sg, ct, ax, means, sigmas, table, levels, centers,
+            n_clients=n, batch=128, impl=i)[1])
+        us = _time(fn, params, images, labels, seg, counts, aux)
+        rows.append(f"probe_fuzzy_{impl}_S={s},{us:.1f},us_per_call;"
+                    f"fused probe->evaluate, N={n} clients"
+                    + (";interpret mode" if impl == "pallas" else ""))
+    return rows
+
+
+def bench_scan_unroll() -> List[str]:
+    """ISSUE 5 satellite: the shared chunk-unroll policy on the
+    remaining ``lax.scan``/``fori_loop`` hot loops (before = unroll 1,
+    after = the repro.scanopt policy).  Interpret-mode Pallas loops
+    execute as real XLA:CPU while loops, so the before/after gap here is
+    the slow path being amortized, measured on tiny shapes."""
+    from repro.kernels.selective_scan import selective_scan_pallas
+    from repro.kernels.wkv6 import wkv6_pallas
+
+    rows = []
+    b, t, h, n = 1, 256, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 6)
+    r, k, v = (jax.random.normal(ks[i], (b, t, h, n)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, n))) * 0.5 + 0.5
+    u = jax.random.normal(ks[4], (h, n)) * 0.1
+    s0 = jnp.zeros((b, h, n, n))
+    per = {}
+    for label, unroll in (("scan", 1), ("chunked", 0)):
+        us = _time(lambda *a, uu=unroll: wkv6_pallas(*a, unroll=uu)[0],
+                   r, k, v, w, u, s0, repeats=8)
+        per[label] = us
+        rows.append(f"wkv6_pallas_{label}_T={t},{us:.1f},"
+                    f"us_per_call;interpret;unroll={unroll or 'policy'}")
+    speedup = per["scan"] / per["chunked"]
+    rows.append(f"wkv6_pallas_unroll_speedup,{speedup:.2f},"
+                f"claim=chunk-unrolled kernel step loop beats the "
+                f"while-loop slow path")
+
+    di, ns = 128, 16
+    x = jax.random.normal(ks[0], (b, t, di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, di)) - 2.0)
+    bm = jax.random.normal(ks[2], (b, t, ns))
+    cm = jax.random.normal(ks[3], (b, t, ns))
+    a = -jax.nn.softplus(jax.random.normal(ks[4], (di, ns)))
+    h0 = jnp.zeros((b, di, ns))
+    per = {}
+    for label, unroll in (("scan", 1), ("chunked", 0)):
+        us = _time(lambda *z, uu=unroll: selective_scan_pallas(
+            *z, unroll=uu)[0], x, dt, bm, cm, a, h0, repeats=8)
+        per[label] = us
+        rows.append(f"selective_scan_pallas_{label}_T={t},{us:.1f},"
+                    f"us_per_call;interpret;unroll={unroll or 'policy'}")
+    speedup = per["scan"] / per["chunked"]
+    rows.append(f"selective_scan_pallas_unroll_speedup,{speedup:.2f},"
+                f"claim=chunk-unrolled kernel time loop beats the "
+                f"while-loop slow path")
     return rows
 
 

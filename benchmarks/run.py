@@ -14,9 +14,12 @@ import time
 import traceback
 
 from benchmarks.engine_throughput import (bench_engine_throughput,
+                                          bench_round_overlap,
                                           bench_trainer_unroll)
 from benchmarks.kernels_bench import (bench_fuzzy_eval, bench_neighbor_elect,
+                                      bench_probe_fuzzy, bench_scan_unroll,
                                       bench_wkv6)
+from benchmarks.prefix_fusion import bench_prefix_fusion
 from benchmarks.paper_figures import (bench_fig2_overhead,
                                       bench_fig6_accuracy,
                                       bench_fig7_distribution,
@@ -34,9 +37,13 @@ BENCHES = {
     "fig7": bench_fig7_distribution,
     "fig8": bench_fig8_noniid,
     "fig9": bench_fig9_accumulated_time,
+    "engine_overlap": bench_round_overlap,
     "kernels_fuzzy": bench_fuzzy_eval,
     "kernels_elect": bench_neighbor_elect,
+    "kernels_probe_fuzzy": bench_probe_fuzzy,
+    "kernels_scan_unroll": bench_scan_unroll,
     "kernels_wkv6": bench_wkv6,
+    "prefix_fusion": bench_prefix_fusion,
     "prefix_sharding": bench_prefix_sharding,
     "selection_collectives": bench_selection_collectives,
     "staleness": bench_staleness,

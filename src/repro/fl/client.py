@@ -53,19 +53,15 @@ from repro.train.optim import sgd_update
 
 Params = Any
 
-# loops up to this many iterations are unrolled into straight-line XLA
-# (past it, compile time beats the while-loop slow path)
-_UNROLL_LIMIT = 64
-
-# step loops too long to unroll fully (the Table-3 cap-4500 trainer: 225
-# steps/epoch) still pay the XLA:CPU while-loop overhead per iteration.
-# Chunk-unrolling the scan body (lax.scan's ``unroll=``) amortizes that
-# overhead over a block of straight-line steps while keeping compile
-# time bounded; the win is modest when the body is a full conv grad
-# (~1.1x on the cap-1600 trainer, benchmarks/engine_throughput.py
-# trainer_unroll) but it is free at runtime and compounds with epochs.
-# Math is unchanged: the same steps run in the same order.
-_SCAN_UNROLL = 8
+# the shared XLA:CPU loop slow-path policy (repro/scanopt.py): loops up
+# to _UNROLL_LIMIT unroll into straight-line XLA; longer step loops (the
+# Table-3 cap-4500 trainer: 225 steps/epoch) chunk-unroll with
+# ``lax.scan(..., unroll=_SCAN_UNROLL)``, amortizing the per-iteration
+# while-loop overhead over a block of straight-line steps (~1.1x on the
+# conv-grad-dominated trainer body, benchmarks/engine_throughput.py
+# trainer_unroll).  Math is unchanged: same steps, same order.
+from repro.scanopt import SCAN_UNROLL as _SCAN_UNROLL
+from repro.scanopt import UNROLL_LIMIT as _UNROLL_LIMIT
 
 # epoch-shuffle form: the one-hot matmul is O(cap^2) — a clear win over
 # the scalar gather path at small caps, a memory/FLOP blowup at the
@@ -268,15 +264,12 @@ def local_train(params: Params, images: jax.Array, labels: jax.Array,
                         scan_unroll)
 
 
-@functools.partial(jax.jit, static_argnames=("epochs", "batch_size",
-                                             "steps_per_epoch", "lr",
-                                             "prox_mu", "scan_unroll"))
-def local_train_batch(params: Params, images: jax.Array, labels: jax.Array,
-                      n_valid: jax.Array, keys: jax.Array, *, epochs: int,
-                      batch_size: int, steps_per_epoch: int, lr: float = 0.05,
-                      prox_mu: float = 0.0,
-                      scan_unroll: int = _SCAN_UNROLL
-                      ) -> Tuple[Params, jax.Array]:
+def _local_train_batch(params: Params, images: jax.Array, labels: jax.Array,
+                       n_valid: jax.Array, keys: jax.Array, *, epochs: int,
+                       batch_size: int, steps_per_epoch: int,
+                       lr: float = 0.05, prox_mu: float = 0.0,
+                       scan_unroll: int = _SCAN_UNROLL
+                       ) -> Tuple[Params, jax.Array]:
     """Eq. 1 local SGD for a whole cohort in one fused call.
 
     images: (C, cap, 28,28,1), labels: (C, cap), n_valid: (C,), keys:
@@ -349,6 +342,23 @@ def local_train_batch(params: Params, images: jax.Array, labels: jax.Array,
     return carry
 
 
+_TRAIN_BATCH_STATICS = ("epochs", "batch_size", "steps_per_epoch", "lr",
+                        "prox_mu", "scan_unroll")
+
+local_train_batch = functools.partial(
+    jax.jit, static_argnames=_TRAIN_BATCH_STATICS)(_local_train_batch)
+
+# Donating twin for callers whose cohort tensors are single-use — the
+# round engine's ``train_groups`` gathers a fresh (bucket, cap, ...)
+# stack every round, and donation lets XLA reuse those buffers for the
+# trained-model outputs instead of round-tripping through fresh
+# allocations.  NEVER use this with arrays that outlive the call (the
+# loop engine's persistent per-group device stacks, benchmark re-calls).
+local_train_batch_donated = functools.partial(
+    jax.jit, static_argnames=_TRAIN_BATCH_STATICS,
+    donate_argnums=(1, 2, 3, 4))(_local_train_batch)
+
+
 # --------------------------------------------------------------------------
 # evaluation
 # --------------------------------------------------------------------------
@@ -367,11 +377,23 @@ def _count_correct(params: Params, images: jax.Array, labels: jax.Array,
     return _chunk_reduce(body, jnp.int32(0), nb)
 
 
-def evaluate_accuracy(params: Params, images: jax.Array,
-                      labels: jax.Array, batch: int = 1024) -> float:
+def evaluate_accuracy_async(params: Params, images: jax.Array,
+                            labels: jax.Array, batch: int = 1024
+                            ) -> Tuple[jax.Array, int]:
+    """Dispatch the test-set accuracy count WITHOUT blocking: returns
+    ``(correct-count device future, n_samples)``.  The round-ahead
+    scheduler resolves the future only after dispatching the next
+    round's selection prefix, so the metric read never serializes the
+    pipeline."""
     cap = images.shape[0]
     pad = (-cap) % batch
     if pad:
         images = jnp.pad(images, ((0, pad), (0, 0), (0, 0), (0, 0)))
         labels = jnp.pad(labels, (0, pad), constant_values=-1)
-    return float(_count_correct(params, images, labels, batch)) / float(cap)
+    return _count_correct(params, images, labels, batch), cap
+
+
+def evaluate_accuracy(params: Params, images: jax.Array,
+                      labels: jax.Array, batch: int = 1024) -> float:
+    correct, cap = evaluate_accuracy_async(params, images, labels, batch)
+    return float(correct) / float(cap)

@@ -57,7 +57,8 @@ from repro.core.rules import build_rule_table
 from repro.core.selection import (ccs_fuzzy_select, ccs_random_select,
                                   dcs_select, selection_stats)
 from repro.fl.aggregation import fedavg_masked, fedavg_sums
-from repro.fl.client import dataset_loss_packed, local_train_batch
+from repro.fl.client import (dataset_loss_packed, local_train_batch,
+                             local_train_batch_donated)
 from repro.fl.mobility import positions_jax
 from repro.fl.network import (NetworkConfig, cwnd_loss_fields,
                               pinned_channel_shadow,
@@ -68,7 +69,8 @@ from repro.fl.partition import ClientGroup
 from repro.fl.timing import (TimingConfig, completes_before_deadline,
                              training_time_s)
 from repro.kernels import ops as kops
-from repro.sharding.api import CLIENT_AXIS, current_mesh, resolve_pspec
+from repro.sharding.api import (CLIENT_AXIS, current_mesh, mesh_axis_size,
+                                resolve_pspec)
 
 Params = Any
 
@@ -120,6 +122,16 @@ class StageConfig:
     timing: TimingConfig          # frozen: epochs/batch/B_exe/deadline
     network: NetworkConfig        # frozen: rates/shadowing/Reno params
     probe_batch: int = 128
+    # device-resident fused probe->evaluate fast path (kops.probe_fuzzy):
+    # default OFF — the staged jnp path below stays the bitwise-pinned
+    # reference.  ON, the Eq. 7 probe forward, Eq. 8 normalization and
+    # Mamdani inference run as one fused op (one Pallas launch on TPU),
+    # and the simulation packs the probe TIGHT (no per-client batch
+    # alignment), so small clients stop paying dead probe rows.  Masks
+    # are pinned bit-identical to the unfused path in
+    # tests/test_probe_fuzzy.py; per-client losses may differ in the
+    # last ulp (different — tighter — sample grouping).
+    fused_probe: bool = False
 
 
 @functools.lru_cache(maxsize=None)
@@ -202,8 +214,24 @@ def _prefix(st: RoundStatics, params: Params, rnd: jax.Array,
     t_s = rnd.astype(jnp.float32) * cfg.timing.deadline_s
     k_sel = jax.random.fold_in(sel_key, rnd)
     k_pred, k_upload = jax.random.split(jax.random.fold_in(net_key, rnd))
-    pos, feats = features(st, cfg, params, t_s, k_pred)
-    evals = evaluate(st, feats)
+    if cfg.fused_probe:
+        # fused fast path: probe forward + Eq. 8 + Mamdani as one op —
+        # a single kernel launch on the Pallas impl, one fused XLA
+        # subgraph on the jnp impl (plus the tight probe pack built by
+        # FLSimulation when the flag is on)
+        pos = positions(st, cfg, t_s)
+        ta_raw = predicted_throughput_jax(cfg.network, pos, k_pred)
+        aux = jnp.stack([st.n_valid, ta_raw, 1.0 / st.slowdown],
+                        axis=1).astype(jnp.float32)
+        table, levels = _rules()
+        feats, evals = kops.probe_fuzzy(
+            params, st.probe_images, st.probe_labels, st.probe_seg,
+            st.probe_counts, aux, st.means, st.sigmas, table, levels,
+            st.level_centers, n_clients=cfg.n_clients,
+            batch=cfg.probe_batch)
+    else:
+        pos, feats = features(st, cfg, params, t_s, k_pred)
+        evals = evaluate(st, feats)
     mask = select(cfg, pos, evals, k_sel)
     survivors, n_straggler = deadline_filter(st, cfg, pos, mask, k_upload)
     stats = selection_stats(mask, evals)
@@ -224,20 +252,34 @@ def selection_prefix(st: RoundStatics, params: Params, rnd: jax.Array,
     return _prefix(st, params, rnd, sel_key, net_key, cfg=cfg)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def selection_prefix_seeds(st: RoundStatics, params: Params,
-                           rnd: jax.Array, sel_keys: jax.Array,
-                           net_keys: jax.Array, *,
-                           cfg: StageConfig) -> Dict[str, jax.Array]:
-    """The prefix vmapped across a leading seed axis.
-
-    ``st``/``params`` carry stacked ``(S, ...)`` leaves (one slice per
-    seed — same shapes, different data/partitions), ``sel_keys``/
-    ``net_keys`` are ``(S,)``-leading key arrays.  One dispatch evaluates
-    all S seeds' selection stages for round ``rnd``."""
+def _prefix_seeds_body(st: RoundStatics, params: Params,
+                       rnd: jax.Array, sel_keys: jax.Array,
+                       net_keys: jax.Array, *,
+                       cfg: StageConfig) -> Dict[str, jax.Array]:
     return jax.vmap(
         lambda s, p, ks, kn: _prefix(s, p, rnd, ks, kn, cfg=cfg)
     )(st, params, sel_keys, net_keys)
+
+
+selection_prefix_seeds = functools.partial(
+    jax.jit, static_argnames=("cfg",))(_prefix_seeds_body)
+selection_prefix_seeds.__doc__ = """The prefix vmapped across a leading
+seed axis.
+
+``st``/``params`` carry stacked ``(S, ...)`` leaves (one slice per
+seed — same shapes, different data/partitions), ``sel_keys``/
+``net_keys`` are ``(S,)``-leading key arrays.  One dispatch evaluates
+all S seeds' selection stages for round ``rnd``."""
+
+# The round-ahead sweep scheduler re-stacks the per-seed params every
+# round (a fresh (S, ...) buffer per dispatch) — donating them lets XLA
+# reuse that allocation for the prefix's intermediates instead of
+# round-tripping ~S x model_bytes through fresh buffers each round.
+# Only for callers whose stacked params are single-use; the plain
+# variant above keeps its inputs alive.
+selection_prefix_seeds_donated = functools.partial(
+    jax.jit, static_argnames=("cfg",),
+    donate_argnums=(1,))(_prefix_seeds_body)
 
 
 def stack_statics(statics: Sequence[RoundStatics]) -> RoundStatics:
@@ -273,7 +315,12 @@ def train_groups(params: Params, groups: Sequence[ClientGroup],
     Returns ``(stacked models, weights)`` with padding duplicates at
     weight zero, or ``None`` for an empty round (no-op broadcast).
     Groups with an empty cohort are skipped — never padded from a
-    nonexistent ``cohort[0]``."""
+    nonexistent ``cohort[0]``.
+
+    The cohort tensors gathered here are fresh per call, so the trainer
+    runs with ``donate_argnums`` on them — the (bucket, cap, ...)
+    stacks' buffers are recycled into the trained-model outputs instead
+    of round-tripping through new allocations every round."""
     if not survivors.any():
         return None
     stacks, weights = [], []
@@ -284,7 +331,7 @@ def train_groups(params: Params, groups: Sequence[ClientGroup],
             continue                         # empty cohort: skip group
         bucket = cohort_bucket(k)
         idx = np.concatenate([cohort, np.full(bucket - k, cohort[0])])
-        stacked, _ = local_train_batch(
+        stacked, _ = local_train_batch_donated(
             params, jnp.asarray(g.images[idx]), jnp.asarray(g.labels[idx]),
             jnp.asarray(g.n_valid[idx]),
             keys[jnp.asarray(g.client_ids[idx])],
@@ -298,14 +345,22 @@ def train_groups(params: Params, groups: Sequence[ClientGroup],
     return merged, jnp.asarray(np.concatenate(weights))
 
 
+# the merged (sum-of-buckets, ...) model stack is the round's largest
+# fresh buffer (bucket x ~1.66M floats) — donate it into the FedAvg
+_fedavg_masked_donated = jax.jit(
+    lambda merged, weights: fedavg_masked(merged, weights),
+    donate_argnums=(0,))
+
+
 def aggregate(params: Params,
               trained: Optional[Tuple[Params, jax.Array]]) -> Params:
     """FedAvg stage (Eq. 2) over the survivors; an empty round returns
-    the global model unchanged (no-op broadcast)."""
+    the global model unchanged (no-op broadcast).  The merged per-group
+    stacks are single-use, so they are donated into the average."""
     if trained is None:
         return params
     merged, weights = trained
-    return fedavg_masked(merged, weights)
+    return _fedavg_masked_donated(merged, weights)
 
 
 # --------------------------------------------------------------------------
@@ -336,9 +391,7 @@ def aggregate(params: Params,
 
 def mesh_client_shards(mesh: Optional[Mesh]) -> int:
     """The client-axis partition factor of ``mesh`` (1 when unsharded)."""
-    if mesh is None:
-        return 1
-    return int(dict(mesh.shape).get(CLIENT_AXIS, 1))
+    return mesh_axis_size(mesh, CLIENT_AXIS)
 
 
 def active_client_mesh() -> Optional[Mesh]:
@@ -386,9 +439,17 @@ def _sharded_prefix_fn(cfg: StageConfig, mesh: Mesh, seeds: bool):
         ta = predicted_throughput_from_fields(cfg.network, pos, pin_shadow,
                                               loss_u)
         # Eq. 7 over the local probe shard; every client's samples live
-        # on its owner device, so the psum adds exact zeros elsewhere
-        lf_part = dataset_loss_packed(params, pim, plb, pseg, counts,
+        # on its owner device, so the psum adds exact zeros elsewhere.
+        # The fused fast path swaps in the fused probe op (one Pallas
+        # launch per shard on TPU; the psum seam below and the Eq. 8
+        # pmax stay outside the kernel by design).
+        if cfg.fused_probe:
+            lf_part = kops.probe_loss(params, pim, plb, pseg, counts,
                                       n_clients=n, batch=cfg.probe_batch)
+        else:
+            lf_part = dataset_loss_packed(params, pim, plb, pseg, counts,
+                                          n_clients=n,
+                                          batch=cfg.probe_batch)
         lf_full = jax.lax.psum(lf_part, CLIENT_AXIS)
         lf = jax.lax.dynamic_slice_in_dim(jnp.pad(lf_full, (0, pad)),
                                           i * shard_n, shard_n)
@@ -552,7 +613,9 @@ def _sharded_group_trainer(mesh: Mesh, epochs: int, batch_size: int,
     c = P(CLIENT_AXIS)
     sharded = shard_map(body, mesh, in_specs=(P(), c, c, c, c, c),
                         out_specs=(P(), P()), check_rep=False)
-    return jax.jit(sharded)
+    # the cohort shards are device_put fresh per round by the gather
+    # below — donate them so the per-device training buffers recycle
+    return jax.jit(sharded, donate_argnums=(1, 2, 3, 4, 5))
 
 
 def train_group_cohort_sharded(params: Params, group: ClientGroup,
@@ -623,6 +686,19 @@ def train_groups_sharded(params: Params, groups: Sequence[ClientGroup],
     return num_tot, den_tot
 
 
+def _finish_sharded_aggregate(num: Params, den: jax.Array,
+                              params: Params) -> Params:
+    inv = 1.0 / jnp.maximum(den, 1e-9)
+    return jax.tree.map(lambda s_leaf, p: (s_leaf * inv).astype(p.dtype),
+                        num, params)
+
+
+# the psum'd weighted-sum tree is fresh per round — donate it into the
+# normalized global model
+_finish_sharded_aggregate_donated = jax.jit(_finish_sharded_aggregate,
+                                            donate_argnums=(0,))
+
+
 def aggregate_sharded(params: Params,
                       trained: Optional[Tuple[Params, jax.Array]]) -> Params:
     """Finish Eq. 2 from the sharded trainer's psum'd partial sums; an
@@ -630,6 +706,4 @@ def aggregate_sharded(params: Params,
     if trained is None:
         return params
     num, den = trained
-    inv = 1.0 / jnp.maximum(den, 1e-9)
-    return jax.tree.map(lambda s_leaf, p: (s_leaf * inv).astype(p.dtype),
-                        num, params)
+    return _finish_sharded_aggregate_donated(num, den, params)

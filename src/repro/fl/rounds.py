@@ -77,8 +77,8 @@ from repro.core.overhead import (accumulated_time_s, IoVParams,
 from repro.data.synthetic import make_dataset, train_test_split
 from repro.fl import pipeline
 from repro.fl.aggregation import fedavg
-from repro.fl.client import (evaluate_accuracy, local_train,
-                             local_train_batch)
+from repro.fl.client import (evaluate_accuracy_async, local_train,
+                             local_train_batch_donated)
 from repro.fl.mobility import FreewayMobility, MobilityConfig
 from repro.fl.network import NetworkConfig
 from repro.fl.partition import (PartitionConfig, partition, stack_clients,
@@ -115,6 +115,14 @@ class FLSimConfig:
     uniform_capacity: bool = False       # True: single max-cap group (the
                                          # pre-grouping layout; benchmark
                                          # baseline only)
+    fused_probe: bool = False            # device-resident fused probe ->
+                                         # evaluate fast path + TIGHT probe
+                                         # packing (see StageConfig); masks
+                                         # pinned bit-identical to the
+                                         # default path in tests
+    overlap_rounds: bool = False         # round-ahead scheduler: run()
+                                         # dispatches round r+1's selection
+                                         # prefix while round r trains
     seed: int = 0
     partition: PartitionConfig = field(default_factory=PartitionConfig)
     mobility: MobilityConfig = field(default_factory=MobilityConfig)
@@ -219,7 +227,8 @@ class FLSimulation:
             speed_jitter=cfg.mobility.speed_jitter,
             timing=TimingConfig(cfg.local_epochs, cfg.batch_size,
                                 deadline_s=cfg.deadline_s),
-            network=cfg.network, probe_batch=self._PROBE_BATCH)
+            network=cfg.network, probe_batch=self._PROBE_BATCH,
+            fused_probe=cfg.fused_probe)
 
     # ------------------------------------------------------------------
     _PROBE_BATCH = 128
@@ -243,10 +252,21 @@ class FLSimulation:
         alignment costs probe FLOPs — up to ``_PROBE_BATCH - 1`` sentinel
         rows per client even unsharded, vs the pre-mesh tight pack — a
         deliberate trade: the probe is one forward pass per round and
-        the alignment is what keeps masks reproducible across meshes."""
+        the alignment is what keeps masks reproducible across meshes.
+
+        ``fused_probe=True`` packs TIGHT instead: no per-client batch
+        alignment, so a 45-sample Table-3 client contributes 45 probe
+        rows, not 128 — on quantity-skewed fleets this halves (or
+        better) the probe FLOPs, which is most of the fused fast path's
+        measured CPU win (benchmarks ``prefix_fusion``).  Per-client
+        losses then sum the same sample losses in a different batch
+        grouping, so they can differ from the aligned pack in the last
+        ulp; the selection masks are pinned bit-identical to the
+        default path in tests/test_probe_fuzzy.py."""
         probe = min(self.cfg.probe_samples, self.cap)
         take = np.minimum(self.n_valid, probe).astype(np.int64)
         batch = self._PROBE_BATCH
+        align = 1 if self.cfg.fused_probe else batch
         shard_clients = pipeline.pad_to_shards(self.n,
                                                self.n_shards) // self.n_shards
         im_shape = self.groups[0].images.shape[2:]
@@ -263,7 +283,7 @@ class FLSimulation:
                 ims.append(g.images[li, :t])
                 lbs.append(g.labels[li, :t])
                 segs.append(np.full(t, i))
-                pad = (-t) % batch
+                pad = (-t) % align
                 if pad:                      # align the client to batches
                     ims.append(np.zeros((pad,) + im_shape, im_dtype))
                     lbs.append(np.zeros(pad, lb_dtype))
@@ -409,7 +429,11 @@ class FLSimulation:
                         batch_size=cfg.batch_size, lr=cfg.lr,
                         prox_mu=cfg.prox_mu)
                     continue
-                local_train_batch(
+                # the donated twin is the jit the round path actually
+                # calls (train_groups) — warming the plain wrapper
+                # would fill a cache nobody reads; the dummy inputs
+                # here are fresh, so donation is safe
+                local_train_batch_donated(
                     self.params, jnp.asarray(g.images[idx]),
                     jnp.asarray(g.labels[idx]),
                     jnp.asarray(g.n_valid[idx]),
@@ -454,29 +478,74 @@ class FLSimulation:
         may come from a seed-vmapped sweep dispatch).  This is the single
         device->host crossing of the round — the survivor mask becomes
         concrete here, at the cohort gather."""
-        cfg = self.cfg
         host = jax.device_get(state)
-        mask = np.asarray(host["mask"])
-        survivors = np.asarray(host["survivors"])
-        self.last_mask = mask
-        n_selected = int(host["n_selected"])
+        self._dispatch_training(rnd, host)
+        acc, n_test = evaluate_accuracy_async(
+            self.params, self.test_images, self.test_labels, batch=256)
+        return self._round_row(rnd, host, acc, n_test)
 
-        # local training (Eq. 1) + aggregation (Eq. 2)
+    def _dispatch_training(self, rnd: int, host: Dict) -> None:
+        """Steps 5 + 7 from a host-side prefix state: cohort gather and
+        training/aggregation dispatch.  Returns as soon as the work is
+        enqueued — ``self.params`` becomes a device future."""
+        survivors = np.asarray(host["survivors"])
+        self.last_mask = np.asarray(host["mask"])
         keys = self._round_keys(rnd)
-        if cfg.engine == "batched":
+        if self.cfg.engine == "batched":
             self._train_batched(survivors, keys)
         else:
             self._train_loop(survivors, keys)
 
-        acc = evaluate_accuracy(self.params, self.test_images,
-                                self.test_labels, batch=256)
-        row = {"round": rnd, "accuracy": acc, "n_selected": n_selected,
+    def _round_row(self, rnd: int, host: Dict, acc_count: jax.Array,
+                   n_test: int) -> Dict[str, float]:
+        """Resolve the round's metrics row (blocks on the accuracy
+        count — the round's second and last device read)."""
+        n_selected = int(host["n_selected"])
+        survivors = np.asarray(host["survivors"])
+        row = {"round": rnd,
+               "accuracy": float(acc_count) / float(n_test),
+               "n_selected": n_selected,
                "n_aggregated": int(survivors.sum()),
                "n_straggler": int(host["n_straggler"]),
                "mean_eval_selected": float(host["mean_eval_selected"])}
         row.update(self._comm_accounting(n_selected))
         return row
 
-    def run(self, n_rounds: Optional[int] = None) -> List[Dict[str, float]]:
+    def run(self, n_rounds: Optional[int] = None,
+            overlap: Optional[bool] = None) -> List[Dict[str, float]]:
+        """Drive ``n`` rounds; ``overlap=True`` (or the config's
+        ``overlap_rounds``) uses the round-ahead scheduler."""
         n = n_rounds or self.cfg.n_rounds
-        return [self.run_round(r) for r in range(n)]
+        if overlap is None:
+            overlap = self.cfg.overlap_rounds
+        if not overlap:
+            return [self.run_round(r) for r in range(n)]
+        return self.run_overlapped(n)
+
+    def run_overlapped(self, n_rounds: int) -> List[Dict[str, float]]:
+        """Round-ahead pipelined driver: identical rounds, pipelined
+        dispatch.
+
+        The selection prefix is pure in ``(statics, params, rnd, keys)``
+        and training/aggregation only *dispatch* asynchronously, so
+        round r+1's prefix can be enqueued on the ``params_{r+1}``
+        device future as soon as round r's trainers are queued — before
+        round r's metrics are read.  The only hard fence per round is
+        the ``device_get`` at the cohort gather (survivor indices must
+        be concrete to slice the fixed-shape stacks); the accuracy read
+        happens after the round-ahead dispatch, so the device never
+        idles waiting for host bookkeeping between rounds.  Rounds are
+        bit-identical to the serial driver — same ops in the same
+        order, only enqueued earlier (pinned in
+        tests/test_probe_fuzzy.py)."""
+        rows: List[Dict[str, float]] = []
+        state = self.selection_state(0)
+        for r in range(n_rounds):
+            host = jax.device_get(state)     # fence: the cohort gather
+            self._dispatch_training(r, host)
+            acc, n_test = evaluate_accuracy_async(
+                self.params, self.test_images, self.test_labels, batch=256)
+            if r + 1 < n_rounds:             # round-ahead: r+1's prefix
+                state = self.selection_state(r + 1)
+            rows.append(self._round_row(r, host, acc, n_test))
+        return rows

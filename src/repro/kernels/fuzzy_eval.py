@@ -10,6 +10,16 @@ TPU layout: participants live on the lane axis.  Inputs are transposed
 to (V=4, P) so a block is (4, BLOCK_P) — 4 sublanes x 128*k lanes.  The
 81-rule table is a *static* Python constant, so the rule loop fully
 unrolls into vectorised min/max ops; there is no gather in the kernel.
+
+The block size adapts to the fleet: ``BLOCK_P`` is a *cap*, and a
+P-lane batch runs at ``min(BLOCK_P, P rounded up to a lane multiple)``
+— a 96-client fleet evaluates in one (4, 128) block instead of padding
+10.7x to 1024 dead lanes (the fixed-block regression this replaces).
+
+``mamdani_lanes`` is the kernel body's inference core (memberships ->
+81 static rules -> COG) over a ``(V, P)`` lane-axis block; the fused
+probe->evaluate kernel (``kernels/probe_fuzzy.py``) reuses it verbatim
+so the two kernels cannot drift apart.
 """
 from __future__ import annotations
 
@@ -21,21 +31,26 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-BLOCK_P = 1024
+BLOCK_P = 1024       # cap; see block_p()
+LANE = 128           # TPU lane width — the minimum/alignment block unit
 NUM_VARS = 4
 NUM_LEVELS = 3       # per-variable linguistic levels (low / mid / high)
 NUM_OUT = 9          # L0..L8
 
 
-def _kernel(x_ref, inv_max_ref, means_ref, sigmas_ref, centers_ref, o_ref, *,
-            rule_table: tuple, rule_levels: tuple, normalize: bool):
-    x = x_ref[...]                                   # (V, P)
-    means = means_ref[...]                           # (V, L)
-    sigmas = sigmas_ref[...]
-    centers = centers_ref[...]                       # (1, NUM_OUT)
-    if normalize:                                    # Eq. 8 in-kernel
-        x = jnp.clip(x * inv_max_ref[...], 0.0, 1.0)
+def block_p(p: int) -> int:
+    """Participant block size for a P-lane batch: the next lane multiple
+    of P, capped at ``BLOCK_P`` — small fleets stop paying for dead
+    lanes (96 clients: 128-lane block, not 1024)."""
+    return min(BLOCK_P, -(-p // LANE) * LANE)
 
+
+def mamdani_lanes(x: jax.Array, means: jax.Array, sigmas: jax.Array,
+                  centers: jax.Array, rule_table: tuple,
+                  rule_levels: tuple) -> jax.Array:
+    """Mamdani inference over a lane-axis block: x (V, P) in [0, 1] ->
+    evaluations (P,).  The static rule tuples unroll into vectorised
+    min/max chains — shared by the standalone and fused kernels."""
     # memberships mu[v][l]: (P,)
     mu = []
     for v in range(NUM_VARS):
@@ -62,7 +77,25 @@ def _kernel(x_ref, inv_max_ref, means_ref, sigmas_ref, centers_ref, o_ref, *,
             continue
         num = num + centers[0, j] * beta[j]
         den = den + beta[j]
-    o_ref[...] = (num / jnp.maximum(den, 1e-9))[None, :]
+    return num / jnp.maximum(den, 1e-9)
+
+
+def _kernel(x_ref, inv_max_ref, means_ref, sigmas_ref, centers_ref, o_ref, *,
+            rule_table: tuple, rule_levels: tuple, normalize: bool):
+    x = x_ref[...]                                   # (V, P)
+    if normalize:                                    # Eq. 8 in-kernel
+        x = jnp.clip(x * inv_max_ref[...], 0.0, 1.0)
+    o_ref[...] = mamdani_lanes(x, means_ref[...], sigmas_ref[...],
+                               centers_ref[...], rule_table,
+                               rule_levels)[None, :]
+
+
+def static_rules(rule_table: np.ndarray,
+                 rule_levels: np.ndarray) -> Tuple[tuple, tuple]:
+    """Host constants -> hashable static tuples the kernels unroll over."""
+    table = tuple(tuple(int(i) for i in row) for row in np.asarray(rule_table))
+    levels = tuple(int(l) for l in np.asarray(rule_levels))
+    return table, levels
 
 
 def fuzzy_eval_pallas(x: jax.Array, means: jax.Array, sigmas: jax.Array,
@@ -81,26 +114,26 @@ def fuzzy_eval_pallas(x: jax.Array, means: jax.Array, sigmas: jax.Array,
     """
     p, v = x.shape
     assert v == NUM_VARS
-    pad = (-p) % BLOCK_P
+    bp = block_p(p)
+    pad = (-p) % bp
     xp = jnp.pad(x, ((0, pad), (0, 0))).T.astype(jnp.float32)   # (V, P')
     pp = p + pad
     inv_max = (1.0 / jnp.maximum(x.max(axis=0), 1e-9) if normalize
                else jnp.ones((v,))).astype(jnp.float32)[:, None]
-    table = tuple(tuple(int(i) for i in row) for row in np.asarray(rule_table))
-    levels = tuple(int(l) for l in np.asarray(rule_levels))
+    table, levels = static_rules(rule_table, rule_levels)
 
     out = pl.pallas_call(
         functools.partial(_kernel, rule_table=table, rule_levels=levels,
                           normalize=normalize),
-        grid=(pp // BLOCK_P,),
+        grid=(pp // bp,),
         in_specs=[
-            pl.BlockSpec((NUM_VARS, BLOCK_P), lambda i: (0, i)),
+            pl.BlockSpec((NUM_VARS, bp), lambda i: (0, i)),
             pl.BlockSpec((NUM_VARS, 1), lambda i: (0, 0)),
             pl.BlockSpec((NUM_VARS, NUM_LEVELS), lambda i: (0, 0)),
             pl.BlockSpec((NUM_VARS, NUM_LEVELS), lambda i: (0, 0)),
             pl.BlockSpec((1, NUM_OUT), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, BLOCK_P), lambda i: (0, i)),
+        out_specs=pl.BlockSpec((1, bp), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, pp), jnp.float32),
         interpret=interpret,
     )(xp, inv_max, means.astype(jnp.float32), sigmas.astype(jnp.float32),

@@ -83,6 +83,74 @@ def fuzzy_eval(x, means, sigmas, rule_table: np.ndarray,
 
 
 # --------------------------------------------------------------------------
+# Fused Eq. 7 probe -> Eq. 8 -> Mamdani evaluation (the selection hot path)
+# --------------------------------------------------------------------------
+
+def probe_fuzzy(params, images, labels, seg, counts, aux, means, sigmas,
+                rule_table: np.ndarray, rule_levels: np.ndarray,
+                level_centers, *, n_clients: int, batch: int = 128,
+                impl: Optional[str] = None,
+                col_maxima=None) -> Tuple[jax.Array, jax.Array]:
+    """The selection prefix's device-resident fast path: packed Eq. 7
+    probe samples -> per-client raw features + Mamdani evaluations.
+
+    - ``jnp`` (default on CPU): the chunked packed probe
+      (``dataset_loss_packed``) and the reference Mamdani inference fused
+      into the caller's jit — one XLA program, no intermediate host or
+      HBM round-trips between the stages.
+    - ``pallas``: ONE kernel launch (``probe_fuzzy_pallas``): the conv/
+      pool/dense probe staged through VMEM, per-client one-hot loss
+      reduction on the lane axis, Eq. 8 + 81-rule Mamdani on the final
+      grid step.  Interpret mode off-TPU.
+    - ``oracle``: the naive unchunked transcription (tests only).
+
+    ``aux``: (N, 3) raw [SQ, TA, CC] columns; ``col_maxima``: optional
+    (4,) external Eq. 8 maxima (the mesh-sharded prefix's pmax seam).
+    Returns ``(feats (N, 4) raw, evals (N,))``."""
+    m = _impl(impl)
+    if m == "pallas":
+        from repro.kernels.probe_fuzzy import probe_fuzzy_pallas
+        return probe_fuzzy_pallas(params, images, labels, seg, counts, aux,
+                                  means, sigmas, rule_table, rule_levels,
+                                  level_centers, n_clients=n_clients,
+                                  interpret=_interpret(),
+                                  col_maxima=col_maxima)
+    if m == "oracle":
+        return kref.probe_fuzzy_ref(params, images, labels, seg, counts,
+                                    aux, means, sigmas, rule_table,
+                                    rule_levels, level_centers,
+                                    n_clients=n_clients,
+                                    col_maxima=col_maxima)
+    from repro.fl.client import dataset_loss_packed
+    lf = dataset_loss_packed(params, images, labels, seg, counts,
+                             n_clients=n_clients, batch=batch)
+    feats = jnp.concatenate([aux, lf[:, None]], axis=1).astype(jnp.float32)
+    evals = fuzzy_eval(feats, means, sigmas, rule_table, rule_levels,
+                       level_centers, impl="jnp", normalize=True,
+                       col_maxima=col_maxima)
+    return feats, evals
+
+
+def probe_loss(params, images, labels, seg, counts, *, n_clients: int,
+               batch: int = 128, impl: Optional[str] = None) -> jax.Array:
+    """The fused fast path's probe half alone: (N,) per-client Eq. 7 mean
+    losses.  The mesh-sharded prefix runs this per shard — the psum that
+    merges shards' loss lanes stays outside the kernel."""
+    m = _impl(impl)
+    if m == "pallas":
+        from repro.kernels.probe_fuzzy import probe_loss_pallas
+        return probe_loss_pallas(params, images, labels, seg, counts,
+                                 n_clients=n_clients,
+                                 interpret=_interpret())
+    if m == "oracle":
+        return kref.probe_loss_ref(params, images, labels, seg, counts,
+                                   n_clients=n_clients)
+    from repro.fl.client import dataset_loss_packed
+    return dataset_loss_packed(params, images, labels, seg, counts,
+                               n_clients=n_clients, batch=batch)
+
+
+# --------------------------------------------------------------------------
 # Neighbour election
 # --------------------------------------------------------------------------
 

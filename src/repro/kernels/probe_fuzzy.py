@@ -1,0 +1,279 @@
+"""Pallas TPU kernel: fused Eq. 7 probe -> Eq. 8 -> Mamdani evaluation.
+
+The per-round selection hot path runs the probe CNN forward over every
+participant's probe samples, normalizes the four objective columns and
+evaluates the 81-rule Mamdani base — previously three dispatches
+(``dataset_loss_packed`` -> transpose/stack -> ``fuzzy_eval_pallas``)
+with the packed activations round-tripping through HBM between them.
+This kernel fuses the chain into ONE launch:
+
+- grid over blocks of ``block_s`` packed probe samples (TPU grid order
+  is sequential, so the per-client loss accumulator lives in VMEM
+  scratch and carries across blocks);
+- per block: conv1 -> pool -> conv2 -> pool -> fc1 -> fc2 staged in
+  VMEM, the convolutions expressed as im2col GEMMs (25 static shifted
+  slices concatenated on the channel axis, then one MXU matmul — no
+  conv primitive exists in Mosaic);
+- the per-sample NLL reduces into per-client lanes with a one-hot
+  matmul on the lane axis (a scatter would serialize);
+- the last grid step divides by the per-client counts (Eq. 7 mean),
+  assembles the (4, lanes) raw feature block, applies Eq. 8 max-scaling
+  (external column maxima — the mesh-sharded path's pmax seam — or
+  in-kernel masked lane maxima) and runs the shared ``mamdani_lanes``
+  inference from ``kernels/fuzzy_eval.py``.
+
+Clients live on the lane axis (``n_clients + 1`` lanes rounded up to a
+lane multiple; the ``+ 1`` overflow lane swallows padding samples).
+VMEM framing: the fc1 weight block (3136 x 512 fp32 = 6.4 MB) dominates;
+``block_s = 64`` keeps the widest activation (64 x 28 x 28 x 32 fp32 =
+6.4 MB) at parity with it, ~14 MB total with the smaller stages.
+
+On this CPU container the kernel executes in interpret mode (parity
+tests); the fast CPU path is the jnp impl in ``kernels/ops.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.fuzzy_eval import (LANE, NUM_LEVELS, NUM_OUT, NUM_VARS,
+                                      mamdani_lanes, static_rules)
+
+BLOCK_S = 64         # probe samples per grid step (see VMEM framing above)
+
+
+def _conv_same_gemm(x: jax.Array, wmat: jax.Array, b: jax.Array,
+                    k: int) -> jax.Array:
+    """SAME stride-1 convolution as an im2col GEMM: x (B, H, W, Cin),
+    wmat (k*k*Cin, Cout) — 25 static shifted slices concatenated on the
+    channel axis feed one matmul (tap-major, channel-minor rows, i.e.
+    ``w.reshape(k*k*Cin, Cout)`` of an HWIO kernel)."""
+    bs, h, w, cin = x.shape
+    r = k // 2
+    xp = jnp.pad(x, ((0, 0), (r, r), (r, r), (0, 0)))
+    cols = [xp[:, dy:dy + h, dx:dx + w, :].reshape(bs * h * w, cin)
+            for dy in range(k) for dx in range(k)]
+    col = jnp.concatenate(cols, axis=1)              # (B*H*W, k*k*Cin)
+    return (col @ wmat).reshape(bs, h, w, -1) + b[0]
+
+
+def _pool2(x: jax.Array) -> jax.Array:
+    """2x2/2 max pool as reshape-max (tiles exactly; no reduce_window)."""
+    bs, h, w, c = x.shape
+    return x.reshape(bs, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def _block_losses(im_ref, lb_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+                  f1_ref, fb1_ref, f2_ref, fb2_ref, *, img: int,
+                  k: int) -> jax.Array:
+    """One block's CNN forward + per-sample NLL: (block_s,) losses."""
+    bs = im_ref.shape[0]
+    x = im_ref[...].reshape(bs, img, img, 1)
+    x = _pool2(jnp.maximum(_conv_same_gemm(x, w1_ref[...], b1_ref[...], k),
+                           0.0))
+    x = _pool2(jnp.maximum(_conv_same_gemm(x, w2_ref[...], b2_ref[...], k),
+                           0.0))
+    x = x.reshape(bs, -1)
+    h = jnp.maximum(x @ f1_ref[...] + fb1_ref[0], 0.0)
+    logits = h @ f2_ref[...] + fb2_ref[0]            # (bs, 10)
+    zmax = jnp.max(logits, axis=-1)
+    logz = zmax + jnp.log(jnp.sum(jnp.exp(logits - zmax[:, None]), axis=-1))
+    n_cls = logits.shape[-1]
+    onehot = (lb_ref[...][0, :, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (1, n_cls), 1)
+              ).astype(logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    return logz - gold
+
+
+def _accumulate(acc_ref, losses: jax.Array, seg_ref, lanes: int) -> None:
+    """Per-client one-hot loss reduction on the lane axis."""
+    onehot = (seg_ref[...][0, :, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (1, lanes), 1)
+              ).astype(jnp.float32)                  # (bs, lanes)
+    acc_ref[...] += losses[None, :] @ onehot
+
+
+def _fused_kernel(im_ref, lb_ref, seg_ref, counts_ref, aux_ref, means_ref,
+                  sigmas_ref, centers_ref, colmax_ref, w1_ref, b1_ref,
+                  w2_ref, b2_ref, f1_ref, fb1_ref, f2_ref, fb2_ref,
+                  lf_ref, ev_ref, acc_ref, *, rule_table: tuple,
+                  rule_levels: tuple, n_clients: int, img: int, k: int,
+                  external_maxima: bool):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        lf_ref[...] = jnp.zeros_like(lf_ref)
+        ev_ref[...] = jnp.zeros_like(ev_ref)
+
+    losses = _block_losses(im_ref, lb_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+                           f1_ref, fb1_ref, f2_ref, fb2_ref, img=img, k=k)
+    lanes = acc_ref.shape[1]
+    _accumulate(acc_ref, losses, seg_ref, lanes)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _finish():
+        lf = acc_ref[0, :] / jnp.maximum(counts_ref[0, :], 1.0)
+        lf_ref[...] = lf[None, :]
+        feats = jnp.concatenate([aux_ref[...], lf[None, :]], axis=0)
+        valid = (jax.lax.broadcasted_iota(jnp.int32, (1, lanes), 1)
+                 < n_clients)                        # (1, lanes)
+        if external_maxima:
+            maxima = colmax_ref[...]                 # (V, 1)
+        else:                                        # Eq. 8 over the fleet
+            maxima = jnp.max(jnp.where(valid, feats, -jnp.inf),
+                             axis=1, keepdims=True)
+        x = jnp.clip(feats / jnp.maximum(maxima, 1e-9), 0.0, 1.0)
+        ev = mamdani_lanes(x, means_ref[...], sigmas_ref[...],
+                           centers_ref[...], rule_table, rule_levels)
+        ev_ref[...] = jnp.where(valid, ev[None, :], 0.0)
+
+
+def _loss_kernel(im_ref, lb_ref, seg_ref, counts_ref, w1_ref, b1_ref,
+                 w2_ref, b2_ref, f1_ref, fb1_ref, f2_ref, fb2_ref,
+                 lf_ref, acc_ref, *, img: int, k: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        lf_ref[...] = jnp.zeros_like(lf_ref)
+
+    losses = _block_losses(im_ref, lb_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+                           f1_ref, fb1_ref, f2_ref, fb2_ref, img=img, k=k)
+    _accumulate(acc_ref, losses, seg_ref, acc_ref.shape[1])
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _finish():
+        lf_ref[...] = (acc_ref[...] /
+                       jnp.maximum(counts_ref[...], 1.0))
+
+
+def _lanes(n_clients: int) -> int:
+    """Client lanes: n + 1 (overflow lane for padding samples) rounded
+    up to a lane multiple."""
+    return -(-(n_clients + 1) // LANE) * LANE
+
+
+def _packed_operands(params, images, labels, seg, counts, n_clients: int,
+                     block_s: int):
+    """Flatten/pad the packed probe + CNN weights into kernel layout."""
+    s = images.shape[0]
+    pad = (-s) % block_s
+    f32 = jnp.float32
+    im = images.reshape(s, -1).astype(f32)
+    if pad:
+        im = jnp.pad(im, ((0, pad), (0, 0)))
+        labels = jnp.pad(labels, (0, pad))
+        seg = jnp.pad(seg, (0, pad), constant_values=n_clients)
+    lanes = _lanes(n_clients)
+    counts_l = jnp.zeros((1, lanes), f32).at[0, :n_clients].set(
+        counts.astype(f32))
+    k = params["conv1"]["w"].shape[0]
+    img = int(np.sqrt(im.shape[1]))
+    weights = []
+    for name in ("conv1", "conv2"):
+        w = params[name]["w"].astype(f32)
+        weights += [w.reshape(-1, w.shape[-1]),
+                    params[name]["b"].astype(f32)[None, :]]
+    for name in ("fc1", "fc2"):
+        weights += [params[name]["w"].astype(f32),
+                    params[name]["b"].astype(f32)[None, :]]
+    return (im, labels.astype(jnp.int32)[None, :],
+            seg.astype(jnp.int32)[None, :], counts_l, weights, lanes,
+            img, k, im.shape[0] // block_s)
+
+
+def _rep(shape):
+    return pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+
+def _weight_specs(weights):
+    return [_rep(tuple(w.shape)) for w in weights]
+
+
+def probe_loss_pallas(params, images: jax.Array, labels: jax.Array,
+                      seg: jax.Array, counts: jax.Array, *, n_clients: int,
+                      block_s: int = BLOCK_S,
+                      interpret: bool = True) -> jax.Array:
+    """Eq. 7 packed probe as one kernel launch: (S, 28, 28, 1) samples ->
+    (N,) per-client mean losses.  The mesh-sharded prefix calls this per
+    shard and psums the result (its collective seam stays outside the
+    kernel)."""
+    (im, lb, sg, counts_l, weights, lanes, img, k, nb) = _packed_operands(
+        params, images, labels, seg, counts, n_clients, block_s)
+    out = pl.pallas_call(
+        functools.partial(_loss_kernel, img=img, k=k),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_s, img * img), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_s), lambda i: (0, i)),
+            pl.BlockSpec((1, block_s), lambda i: (0, i)),
+            _rep((1, lanes)),
+        ] + _weight_specs(weights),
+        out_specs=_rep((1, lanes)),
+        out_shape=jax.ShapeDtypeStruct((1, lanes), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, lanes), jnp.float32)],
+        interpret=interpret,
+    )(im, lb, sg, counts_l, *weights)
+    return out[0, :n_clients]
+
+
+def probe_fuzzy_pallas(params, images: jax.Array, labels: jax.Array,
+                       seg: jax.Array, counts: jax.Array, aux: jax.Array,
+                       means: jax.Array, sigmas: jax.Array,
+                       rule_table: np.ndarray, rule_levels: np.ndarray,
+                       level_centers: jax.Array, *, n_clients: int,
+                       block_s: int = BLOCK_S, interpret: bool = True,
+                       col_maxima: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """The fused fast path: packed probe samples in, per-client raw
+    features and Mamdani evaluations out, one launch.
+
+    aux: (N, 3) raw [SQ, TA, CC] columns (LF comes from the probe);
+    col_maxima: optional (4,) external Eq. 8 maxima.  Returns
+    ``(feats (N, 4), evals (N,))``."""
+    (im, lb, sg, counts_l, weights, lanes, img, k, nb) = _packed_operands(
+        params, images, labels, seg, counts, n_clients, block_s)
+    f32 = jnp.float32
+    aux_l = jnp.zeros((3, lanes), f32).at[:, :n_clients].set(
+        aux.T.astype(f32))
+    external = col_maxima is not None
+    colmax = (col_maxima.astype(f32)[:, None] if external
+              else jnp.ones((NUM_VARS, 1), f32))
+    table, levels = static_rules(rule_table, rule_levels)
+
+    lf, ev = pl.pallas_call(
+        functools.partial(_fused_kernel, rule_table=table,
+                          rule_levels=levels, n_clients=n_clients, img=img,
+                          k=k, external_maxima=external),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_s, img * img), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_s), lambda i: (0, i)),
+            pl.BlockSpec((1, block_s), lambda i: (0, i)),
+            _rep((1, lanes)),
+            _rep((3, lanes)),
+            _rep((NUM_VARS, NUM_LEVELS)),
+            _rep((NUM_VARS, NUM_LEVELS)),
+            _rep((1, NUM_OUT)),
+            _rep((NUM_VARS, 1)),
+        ] + _weight_specs(weights),
+        out_specs=[_rep((1, lanes)), _rep((1, lanes))],
+        out_shape=[jax.ShapeDtypeStruct((1, lanes), jnp.float32),
+                   jax.ShapeDtypeStruct((1, lanes), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((1, lanes), jnp.float32)],
+        interpret=interpret,
+    )(im, lb, sg, counts_l, aux_l, means.astype(f32), sigmas.astype(f32),
+      level_centers.astype(f32)[None, :], colmax, *weights)
+    lf_n = lf[0, :n_clients]
+    feats = jnp.concatenate([aux.astype(f32), lf_n[:, None]], axis=1)
+    return feats, ev[0, :n_clients]

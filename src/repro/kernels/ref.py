@@ -86,6 +86,55 @@ def fuzzy_eval_ref(x: jax.Array, means: jax.Array, sigmas: jax.Array,
 
 
 # --------------------------------------------------------------------------
+# Fused Eq. 7 probe -> Eq. 8 normalize -> Mamdani evaluation
+# --------------------------------------------------------------------------
+
+def probe_loss_ref(params, images: jax.Array, labels: jax.Array,
+                   seg: jax.Array, counts: jax.Array,
+                   n_clients: int) -> jax.Array:
+    """Naive Eq. 7 over a packed sample tensor: every per-sample loss in
+    one unchunked forward pass, reduced per client with a segment one-hot
+    matvec.  images: (S, 28, 28, 1); seg: (S,) client id per sample
+    (``n_clients`` marks padding rows); counts: (N,).  Returns (N,) mean
+    losses."""
+    from repro.models.cnn import cnn_sample_losses
+    losses = cnn_sample_losses(params, images, labels)        # (S,)
+    onehot = (seg[:, None] == jnp.arange(n_clients + 1)[None, :]
+              ).astype(jnp.float32)                           # (S, N+1)
+    tot = losses @ onehot
+    return tot[:n_clients] / jnp.maximum(counts.astype(jnp.float32), 1.0)
+
+
+def probe_fuzzy_ref(params, images: jax.Array, labels: jax.Array,
+                    seg: jax.Array, counts: jax.Array, aux: jax.Array,
+                    means: jax.Array, sigmas: jax.Array,
+                    rule_table: np.ndarray, rule_levels: np.ndarray,
+                    level_centers: jax.Array, n_clients: int,
+                    col_maxima: jax.Array | None = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """The whole selection hot path as one direct transcription: Eq. 7
+    packed loss probe -> raw feature assembly -> Eq. 8 per-column
+    max-scaling -> Mamdani inference.
+
+    ``aux``: (N, 3) raw [SQ=|D_i|, TA bps, CC=1/C_i] columns; the LF
+    column comes from the probe.  ``col_maxima`` (4,) supplies external
+    Eq. 8 denominators (the mesh-sharded path pmax-reduces them across
+    shards); None computes them over this batch.  Returns
+    ``(feats (N, 4) raw, evals (N,))``."""
+    lf = probe_loss_ref(params, images, labels, seg, counts, n_clients)
+    feats = jnp.concatenate([aux, lf[:, None]], axis=1).astype(jnp.float32)
+    if col_maxima is None:
+        x = feats
+        normalize = True
+    else:
+        x = jnp.clip(feats / jnp.maximum(col_maxima, 1e-9), 0.0, 1.0)
+        normalize = False
+    evals = fuzzy_eval_ref(x, means, sigmas, rule_table, rule_levels,
+                           level_centers, normalize=normalize)
+    return feats, evals
+
+
+# --------------------------------------------------------------------------
 # Neighbour election (distributed client selection, paper Alg. 1)
 # --------------------------------------------------------------------------
 

@@ -26,12 +26,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.scanopt import scan_unroll
+
 BLOCK_D = 256
 CHUNK = 128
 
 
 def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, h0_ref, y_ref, hT_ref,
-            h_scratch):
+            h_scratch, *, unroll: int):
     tc = pl.program_id(2)
 
     @pl.when(tc == 0)
@@ -50,7 +52,11 @@ def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, h0_ref, y_ref, hT_ref,
         y_ref[0, t, :] = jnp.sum(h * c_t[None, :], axis=1)
         return h
 
-    h = jax.lax.fori_loop(0, x_ref.shape[1], step, h_scratch[...])
+    # chunk-unrolled per the shared XLA loop policy (repro/scanopt.py):
+    # interpret mode runs this as an XLA:CPU while loop (the ~5-10x slow
+    # path); on TPU the unroll amortizes loop bookkeeping
+    h = jax.lax.fori_loop(0, x_ref.shape[1], step, h_scratch[...],
+                          unroll=unroll)
     h_scratch[...] = h
 
     @pl.when(tc == pl.num_programs(2) - 1)
@@ -58,16 +64,18 @@ def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, h0_ref, y_ref, hT_ref,
         hT_ref[0] = h
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "unroll"))
 def selective_scan_pallas(x: jax.Array, dt: jax.Array, bmat: jax.Array,
                           cmat: jax.Array, a: jax.Array, h0: jax.Array,
-                          interpret: bool = True
+                          interpret: bool = True, unroll: int = 0
                           ) -> Tuple[jax.Array, jax.Array]:
     """x, dt: (B, T, Di); bmat, cmat: (B, T, N); a: (Di, N);
     h0: (B, Di, N).  Returns (y (B,T,Di) fp32, hT (B,Di,N) fp32).
 
     h_t = exp(dt_t * a) h_{t-1} + (dt_t * x_t) B_t ;  y_t = h_t · C_t.
     ``interpret=True`` executes on CPU (this container); pass False on TPU.
+    ``unroll=0`` applies the shared chunk-unroll policy to the in-kernel
+    time loop; pass 1 to force the plain loop (bench baseline).
     """
     b, t, di = x.shape
     n = bmat.shape[-1]
@@ -76,9 +84,10 @@ def selective_scan_pallas(x: jax.Array, dt: jax.Array, bmat: jax.Array,
     chunk = CHUNK if t % CHUNK == 0 else t
     f32 = jnp.float32
     grid = (b, di // bd, t // chunk)
+    unroll = unroll or scan_unroll(chunk)
 
     y, hT = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, unroll=unroll),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, chunk, bd), lambda i, j, k: (i, k, j)),   # x

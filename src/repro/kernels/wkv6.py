@@ -21,11 +21,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.scanopt import scan_unroll
+
 CHUNK = 128
 
 
 def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
-                 y_ref, sT_ref, s_scratch):
+                 y_ref, sT_ref, s_scratch, *, unroll: int):
     tc = pl.program_id(1)
 
     @pl.when(tc == 0)
@@ -44,7 +46,11 @@ def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
         y_ref[0, t, :] = y
         return wt[:, None] * s + kv
 
-    s = jax.lax.fori_loop(0, r_ref.shape[1], step, s_scratch[...])
+    # chunk-unrolled per the shared XLA loop policy (repro/scanopt.py):
+    # interpret mode executes this loop as an XLA:CPU while (the ~5-10x
+    # slow path); on TPU the unroll amortizes loop bookkeeping
+    s = jax.lax.fori_loop(0, r_ref.shape[1], step, s_scratch[...],
+                          unroll=unroll)
     s_scratch[...] = s
 
     @pl.when(tc == pl.num_programs(1) - 1)
@@ -52,15 +58,18 @@ def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
         sT_ref[0] = s
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "unroll"))
 def wkv6_pallas(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
-                u: jax.Array, s0: jax.Array,
-                interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+                u: jax.Array, s0: jax.Array, interpret: bool = True,
+                unroll: int = 0) -> Tuple[jax.Array, jax.Array]:
     """r,k,v,w: (B,T,H,N) — any float dtype; u: (H,N); s0: (B,H,N,N) fp32.
 
     Returns (y (B,T,H,N) fp32, sT (B,H,N,N) fp32).
     ``interpret=True`` executes the kernel body on CPU (this container);
-    on a real TPU pass ``interpret=False``.
+    on a real TPU pass ``interpret=False``.  ``unroll=0`` applies the
+    shared chunk-unroll policy to the in-kernel step loop (math
+    unchanged — same steps, same order); pass 1 to force the plain loop
+    (the before/after comparison in benchmarks/kernels_bench.py).
     """
     b, t, h, n = r.shape
     bh = b * h
@@ -71,9 +80,10 @@ def wkv6_pallas(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
     ss = s0.astype(jnp.float32).reshape(bh, n, n)
     chunk = CHUNK if t % CHUNK == 0 else t
     grid = (bh, t // chunk)
+    unroll = unroll or scan_unroll(chunk)
 
     y, sT = pl.pallas_call(
-        _wkv6_kernel,
+        functools.partial(_wkv6_kernel, unroll=unroll),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),   # r

@@ -55,6 +55,12 @@ def main(argv=None) -> int:
     ap.add_argument("--mesh", default=None, metavar="clients=K",
                     help="partition the in-round client axis over K "
                          "devices (CPU: emulated host devices)")
+    ap.add_argument("--fused-probe", action="store_true",
+                    help="fused probe->evaluate fast path + tight probe "
+                         "packing (selection masks bit-identical)")
+    ap.add_argument("--overlap-rounds", action="store_true",
+                    help="round-ahead scheduler: dispatch round r+1's "
+                         "selection prefix while round r trains")
     ap.add_argument("--out", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -80,6 +86,8 @@ def main(argv=None) -> int:
                 if not args.paper_profile else mk(scheme, seed=args.seed)
             cfg.mobility = MobilityConfig(distribution=args.distribution,
                                           seed=args.seed)
+            cfg.fused_probe = args.fused_probe
+            cfg.overlap_rounds = args.overlap_rounds
             sim = FLSimulation(cfg)
             t0 = time.time()
             hist = sim.run(args.rounds)

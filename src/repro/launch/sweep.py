@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fl import pipeline
+from repro.fl.client import evaluate_accuracy_async
 from repro.fl.mobility import MobilityConfig
 from repro.fl.partition import PartitionConfig
 from repro.fl.rounds import FLSimConfig, FLSimulation
@@ -111,13 +112,23 @@ ConfigFn = Callable[[str, int, str, int], FLSimConfig]
 def run_seed_group(scheme: str, classes_per_client: int, distribution: str,
                    seeds: Sequence[int], rounds: int,
                    cfg_fn: ConfigFn = fast_cell_config,
-                   vmap_prefix: bool = True) -> List[Dict]:
+                   vmap_prefix: bool = True,
+                   overlap: bool = False) -> List[Dict]:
     """Run every seed of one cell group for ``rounds`` rounds.
 
     When the seeds share a ``StageConfig`` (they do by construction —
     only arrays differ), their selection prefixes are evaluated in ONE
     vmapped dispatch per round; per-seed training and aggregation then
-    complete each round through ``FLSimulation.finish_round``."""
+    complete each round through ``FLSimulation.finish_round``.
+
+    ``overlap=True`` is the round-ahead scheduler: the prefix is pure in
+    ``(statics, params, rnd, keys)`` and the per-seed params become
+    device futures the moment the trainers are enqueued, so round r+1's
+    (vmapped) selection dispatch is issued right after round r's
+    training — before round r's accuracy metrics are read.  The vmapped
+    dispatch then runs with ``donate_argnums`` on the seed-stacked
+    params (a fresh (S, ...) stack every round).  Rows are bit-identical
+    to the serial schedule — same ops, same order, earlier enqueue."""
     sims = [FLSimulation(cfg_fn(scheme, classes_per_client, distribution,
                                 seed)) for seed in seeds]
     if not sims:
@@ -129,30 +140,53 @@ def run_seed_group(scheme: str, classes_per_client: int, distribution: str,
                   if use_vmap else None)
     sel_keys = jnp.stack([s.key for s in sims])
     net_keys = jnp.stack([s.net_key for s in sims])
-
     mesh = pipeline.active_client_mesh()
-    rows: List[Dict] = []
-    for r in range(rounds):
-        if use_vmap:
-            params = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                  *[s.params for s in sims])
-            if mesh is not None:
-                outs = pipeline.selection_prefix_seeds_sharded(
-                    stacked_st, params, jnp.int32(r), sel_keys, net_keys,
-                    cfg=cfg0, mesh=mesh)
-            else:
-                outs = pipeline.selection_prefix_seeds(
-                    stacked_st, params, jnp.int32(r), sel_keys, net_keys,
-                    cfg=cfg0)
-            states = [jax.tree.map(lambda x, i=i: x[i], outs)
-                      for i in range(len(sims))]
+
+    def dispatch(r: int) -> List[Dict]:
+        """Enqueue round ``r``'s selection prefixes; returns per-seed
+        state dicts (device futures — nothing blocks here)."""
+        if not use_vmap:
+            return [sim.selection_state(r) for sim in sims]
+        params = jax.tree.map(lambda *xs: jnp.stack(xs),
+                              *[s.params for s in sims])
+        if mesh is not None:
+            outs = pipeline.selection_prefix_seeds_sharded(
+                stacked_st, params, jnp.int32(r), sel_keys, net_keys,
+                cfg=cfg0, mesh=mesh)
         else:
-            states = [sim.selection_state(r) for sim in sims]
-        for seed, sim, state in zip(seeds, sims, states):
-            row = sim.finish_round(r, state)
-            rows.append({"scheme": scheme, "seed": seed,
-                         "classes_per_client": classes_per_client,
-                         "distribution": distribution, **row})
+            outs = pipeline.selection_prefix_seeds_donated(
+                stacked_st, params, jnp.int32(r), sel_keys, net_keys,
+                cfg=cfg0)
+        return [jax.tree.map(lambda x, i=i: x[i], outs)
+                for i in range(len(sims))]
+
+    def meta(seed: int, row: Dict) -> Dict:
+        return {"scheme": scheme, "seed": seed,
+                "classes_per_client": classes_per_client,
+                "distribution": distribution, **row}
+
+    rows: List[Dict] = []
+    states = None
+    for r in range(rounds):
+        if states is None:
+            states = dispatch(r)
+        nxt = None
+        if overlap:
+            hosts = [jax.device_get(s) for s in states]
+            for sim, host in zip(sims, hosts):       # train dispatch
+                sim._dispatch_training(r, host)
+            pend = [evaluate_accuracy_async(sim.params, sim.test_images,
+                                            sim.test_labels, batch=256)
+                    for sim in sims]
+            if r + 1 < rounds:                       # round-ahead
+                nxt = dispatch(r + 1)
+            for seed, sim, host, (acc, nt) in zip(seeds, sims, hosts,
+                                                  pend):
+                rows.append(meta(seed, sim._round_row(r, host, acc, nt)))
+        else:
+            for seed, sim, state in zip(seeds, sims, states):
+                rows.append(meta(seed, sim.finish_round(r, state)))
+        states = nxt
     return rows
 
 
@@ -199,22 +233,46 @@ def rows_to_csv(rows: List[Dict]) -> str:
     return buf.getvalue()
 
 
+def fused_cell_config(scheme: str, classes_per_client: int,
+                      distribution: str, seed: int) -> FLSimConfig:
+    """``fast_cell_config`` with the fused probe->evaluate fast path on
+    (module-level so it pickles across ``--workers`` boundaries)."""
+    cfg = fast_cell_config(scheme, classes_per_client, distribution, seed)
+    cfg.fused_probe = True
+    return cfg
+
+
+def fused_paper_cell_config(scheme: str, classes_per_client: int,
+                            distribution: str, seed: int) -> FLSimConfig:
+    """``paper_cell_config`` with the fused fast path on."""
+    cfg = paper_cell_config(scheme, classes_per_client, distribution, seed)
+    cfg.fused_probe = True
+    return cfg
+
+
+# base profile -> fused twin (the --fused-probe flag's lookup)
+_FUSED_CFG = {fast_cell_config: fused_cell_config,
+              paper_cell_config: fused_paper_cell_config}
+
+
 def _run_group_worker(args: Tuple) -> List[Dict]:
     """Top-level (picklable) worker: one cell group, serial in-process.
     ``mesh_spec`` (a ``--mesh`` string; Mesh objects don't pickle)
     rebuilds the client mesh inside the worker's own jax runtime."""
     scheme, classes, dist, seeds, rounds, cfg_fn, vmap_prefix, \
-        mesh_spec = args
+        mesh_spec, overlap = args
     from repro.launch.mesh import client_mesh_context
     with client_mesh_context(mesh_spec):
         return run_seed_group(scheme, classes, dist, seeds, rounds,
-                              cfg_fn=cfg_fn, vmap_prefix=vmap_prefix)
+                              cfg_fn=cfg_fn, vmap_prefix=vmap_prefix,
+                              overlap=overlap)
 
 
 def sweep(schemes: Sequence[str], classes_list: Sequence[int],
           distributions: Sequence[str], seeds: Sequence[int], rounds: int,
           cfg_fn: ConfigFn = fast_cell_config, vmap_prefix: bool = True,
           workers: int = 1, mesh_spec: Optional[str] = None,
+          overlap: bool = False,
           log: Optional[Callable[[str], None]] = None) -> List[Dict]:
     """Run the full grid and return aggregated tidy rows.
 
@@ -236,7 +294,7 @@ def sweep(schemes: Sequence[str], classes_list: Sequence[int],
         import multiprocessing as mp
         from concurrent.futures import ProcessPoolExecutor
         jobs = [(s, c, d, tuple(seeds), rounds, cfg_fn, vmap_prefix,
-                 mesh_spec)
+                 mesh_spec, overlap)
                 for (s, c, d) in groups]
         with ProcessPoolExecutor(
                 max_workers=workers,
@@ -253,7 +311,8 @@ def sweep(schemes: Sequence[str], classes_list: Sequence[int],
         t0 = time.time()
         with jax.default_device(dev):
             got = run_seed_group(scheme, classes, dist, seeds, rounds,
-                                 cfg_fn=cfg_fn, vmap_prefix=vmap_prefix)
+                                 cfg_fn=cfg_fn, vmap_prefix=vmap_prefix,
+                                 overlap=overlap)
         rows.extend(got)
         accs = [r["accuracy"] for r in got if r["round"] == rounds - 1]
         log(f"[sweep] {scheme} classes={classes} {dist} on {dev}: "
@@ -284,6 +343,12 @@ def main(argv=None) -> int:
     ap.add_argument("--mesh", default=None, metavar="clients=K",
                     help="partition every cell's in-round client axis "
                          "over K devices (CPU: emulated host devices)")
+    ap.add_argument("--fused-probe", action="store_true",
+                    help="fused probe->evaluate fast path + tight probe "
+                         "packing (masks bit-identical; see README)")
+    ap.add_argument("--overlap-rounds", action="store_true",
+                    help="round-ahead scheduler: dispatch round r+1's "
+                         "selection prefix while round r trains")
     ap.add_argument("--out", default="sweep.csv")
     args = ap.parse_args(argv)
 
@@ -301,6 +366,8 @@ def main(argv=None) -> int:
     classes_list = tuple(int(c) for c in args.classes.split(","))
     distributions = tuple(args.distributions.split(","))
     cfg_fn = paper_cell_config if args.paper_profile else fast_cell_config
+    if args.fused_probe:
+        cfg_fn = _FUSED_CFG[cfg_fn]
 
     t0 = time.time()
     from repro.launch.mesh import client_mesh_context
@@ -312,6 +379,7 @@ def main(argv=None) -> int:
                      seeds=range(args.seeds), rounds=args.rounds,
                      cfg_fn=cfg_fn, vmap_prefix=not args.no_vmap,
                      workers=args.workers, mesh_spec=args.mesh,
+                     overlap=args.overlap_rounds,
                      log=lambda s: print(s, flush=True))
     csv_text = rows_to_csv(rows)
     with open(args.out, "w") as f:

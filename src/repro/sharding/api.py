@@ -51,6 +51,16 @@ def logical_sharding(mesh: Mesh, rules: Dict[str, AxisAssign]):
         _state.mesh, _state.rules = prev
 
 
+def mesh_axis_size(mesh: Optional[Mesh], axis: str) -> int:
+    """The extent of one named mesh axis — 1 when the mesh is None or
+    the axis is absent.  Single source of truth for "how many shards
+    does this logical axis split into" questions (``fl/pipeline.py``'s
+    client-axis partition factor, the launchers' mesh probing)."""
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get(axis, 1))
+
+
 def _axis_size(mesh: Mesh, assign: AxisAssign) -> int:
     if assign is None:
         return 1

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import transformer as tfm
+from repro.scanopt import SCAN_UNROLL
 from repro.train.optim import OptConfig, adamw_update
 
 
@@ -30,6 +31,13 @@ def make_train_step(cfg: ArchConfig, shape: ShapeConfig,
                     opt: OptConfig) -> Callable:
     ga = max(1, shape.grad_accum)
     loss_fn = functools.partial(tfm.train_loss, cfg)
+    # microbatch loop: chunk-unrolled per the shared XLA:CPU slow-path
+    # policy (repro/scanopt.py).  Unlike fl/client.py's CNN steps, the
+    # body here is a full transformer grad, so the cap is SCAN_UNROLL
+    # even for small ga — never the full-unroll regime, which would
+    # multiply transformer lowering time for a body that is already
+    # compute-bound.  Same microbatches, same order.
+    unroll = min(ga, SCAN_UNROLL)
 
     def train_step(params, opt_state, batch):
         micro = _split_micro(batch, ga)
@@ -44,7 +52,7 @@ def make_train_step(cfg: ArchConfig, shape: ShapeConfig,
 
         g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
         (grads, loss_sum), ms = jax.lax.scan(
-            micro_step, (g0, jnp.float32(0.0)), micro)
+            micro_step, (g0, jnp.float32(0.0)), micro, unroll=unroll)
         grads = jax.tree.map(lambda g: g / ga, grads)
         params, opt_state, opt_metrics = adamw_update(
             opt, grads, opt_state, params)
