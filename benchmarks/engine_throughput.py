@@ -36,6 +36,7 @@ from typing import List
 from repro.fl.mobility import MobilityConfig
 from repro.fl.partition import PartitionConfig
 from repro.fl.rounds import FLSimConfig, FLSimulation
+from repro.fl.runconfig import RunConfig
 from repro.fl.client import _SCAN_UNROLL, local_train_batch
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "") == "1"
@@ -59,13 +60,13 @@ else:                          # Table-3-shaped, scaled to CI budget
     WARMUP_ROUNDS, TIMED_ROUNDS = 2, 3
     ENGINES = ("loop", "uniform", "grouped")
 
-# benchmark label -> (FLSimConfig.engine, uniform_capacity)
+# benchmark label -> (RunConfig.engine, uniform_capacity)
 _VARIANTS = {"loop": ("loop", False),
              "uniform": ("batched", True),
              "grouped": ("batched", False)}
 
 
-def _cfg(variant: str) -> FLSimConfig:
+def _sim(variant: str) -> FLSimulation:
     engine, uniform = _VARIANTS[variant]
     part = PartitionConfig(n_clients=N_CLIENTS, classes_per_client=9,
                            **PART)
@@ -74,12 +75,13 @@ def _cfg(variant: str) -> FLSimConfig:
     # eval-ranked schemes bias cohorts towards big clients and turn this
     # into a selection-quality bench.  All variants draw the identical
     # selection sequence, so the comparison stays apples-to-apples.
-    return FLSimConfig(scheme="random", engine=engine, local_epochs=1,
-                       n_clients_central=N_CENTRAL, probe_samples=PROBE,
-                       samples_per_class=SAMPLES_PER_CLASS,
-                       uniform_capacity=uniform, partition=part,
-                       mobility=MobilityConfig(n_vehicles=N_CLIENTS, seed=0),
-                       seed=0)
+    cfg = FLSimConfig(scheme="random", local_epochs=1,
+                      n_clients_central=N_CENTRAL, probe_samples=PROBE,
+                      samples_per_class=SAMPLES_PER_CLASS,
+                      uniform_capacity=uniform, partition=part,
+                      mobility=MobilityConfig(n_vehicles=N_CLIENTS, seed=0),
+                      seed=0)
+    return FLSimulation(cfg, run=RunConfig(engine=engine))
 
 
 def bench_engine_throughput() -> List[str]:
@@ -88,7 +90,7 @@ def bench_engine_throughput() -> List[str]:
     profile = (f"n_clients={N_CLIENTS};big={PART['big_quantity']};"
                f"small={PART['small_quantity']};timed_rounds={TIMED_ROUNDS}")
     for variant in ENGINES:
-        sim = FLSimulation(_cfg(variant))
+        sim = _sim(variant)
         # warmup() pre-executes the trainer once per cohort bucket: cheap
         # insurance at the scaled profile, but at cap 4500 each bucket
         # execution costs a full round's train time (the 225-step scan is
@@ -134,7 +136,7 @@ def cfg(scheme, classes, dist, seed):
     part = PartitionConfig(n_clients=32, big_clients=4, big_quantity=200,
                            small_quantity=45, classes_per_client=9,
                            seed=seed)
-    return FLSimConfig(scheme="random", engine="batched", local_epochs=1,
+    return FLSimConfig(scheme="random", local_epochs=1,
                        n_clients_central=8, probe_samples=64,
                        samples_per_class=400, partition=part,
                        mobility=MobilityConfig(n_vehicles=32, seed=seed),

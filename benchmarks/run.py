@@ -26,7 +26,7 @@ from benchmarks.paper_figures import (bench_fig2_overhead,
                                       bench_fig8_noniid,
                                       bench_fig9_accumulated_time)
 from benchmarks.roofline import bench_roofline_table
-from benchmarks.staleness import bench_staleness
+from benchmarks.staleness import bench_staleness, bench_staleness_lambda
 from benchmarks.selection_collectives import (bench_prefix_sharding,
                                               bench_selection_collectives)
 
@@ -47,6 +47,7 @@ BENCHES = {
     "prefix_sharding": bench_prefix_sharding,
     "selection_collectives": bench_selection_collectives,
     "staleness": bench_staleness,
+    "staleness_lambda": bench_staleness_lambda,
     "roofline": bench_roofline_table,
     "trainer_unroll": bench_trainer_unroll,
 }

@@ -1,21 +1,29 @@
 from repro.fl.aggregation import fedavg, fedavg_masked, global_loss
+from repro.fl.async_server import EventDrivenServer
 from repro.fl.client import (dataset_loss, dataset_loss_batch,
                              dataset_loss_packed, evaluate_accuracy,
                              local_train, local_train_batch)
-from repro.fl.mobility import FreewayMobility, MobilityConfig
+from repro.fl.mobility import (FreewayMobility, MobilityConfig,
+                               coverage_active)
 from repro.fl.network import CellularNetwork, NetworkConfig
 from repro.fl.partition import (PartitionConfig, pad_clients, partition,
                                 stack_clients)
 from repro.fl.rounds import FLSimConfig, FLSimulation
-from repro.fl.timing import TimingConfig, completes_before_deadline, \
-    training_time_s
+from repro.fl.runconfig import RunConfig, add_run_arguments, resolve_run
+from repro.fl.schemes import get_scheme, register_scheme, scheme_names
+from repro.fl.timing import (TimingConfig, completes_before_deadline,
+                             staleness_weight, training_time_s)
 
 __all__ = [
-    "fedavg", "fedavg_masked", "global_loss", "dataset_loss",
-    "dataset_loss_batch", "dataset_loss_packed", "evaluate_accuracy",
-    "local_train",
+    "fedavg", "fedavg_masked", "global_loss", "EventDrivenServer",
+    "dataset_loss", "dataset_loss_batch", "dataset_loss_packed",
+    "evaluate_accuracy", "local_train",
     "local_train_batch", "FreewayMobility", "MobilityConfig",
+    "coverage_active",
     "CellularNetwork", "NetworkConfig", "PartitionConfig", "pad_clients",
     "partition", "stack_clients", "FLSimConfig", "FLSimulation",
-    "TimingConfig", "completes_before_deadline", "training_time_s",
+    "RunConfig", "add_run_arguments", "resolve_run",
+    "get_scheme", "register_scheme", "scheme_names",
+    "TimingConfig", "completes_before_deadline", "staleness_weight",
+    "training_time_s",
 ]

@@ -86,8 +86,25 @@ def positions_jax(x0: jax.Array, speeds: jax.Array, jitter_phase: jax.Array,
     """jax-traceable twin of ``FreewayMobility.positions``: same closed-
     form jitter integral over the model's constant arrays, usable inside
     the staged selection prefix (``fl/pipeline.py``) where ``t_s`` is a
-    traced scalar."""
+    traced scalar.  ``t_s`` broadcasts, so a per-client completion-time
+    vector queries each vehicle's position at its own upload instant."""
     jitter_disp = speed_jitter * _JITTER_PERIOD_S * (
         jnp.cos(jitter_phase)
         - jnp.cos(t_s / _JITTER_PERIOD_S + jitter_phase))
     return jnp.mod(x0 + speeds * t_s + jitter_disp, road_length_m)
+
+
+def coverage_active(pos: jax.Array, *, road_length_m: float,
+                    churn_rate: float) -> jax.Array:
+    """Mobility-driven churn mask (event-driven fleet, ISSUE 6).
+
+    The RSU's coverage window spans ``[0, (1 - churn_rate) * L)`` of the
+    wrapped road: a vehicle whose position falls in the uncovered tail
+    has *departed* (it neither probes nor gets selected, and an upload
+    completing while uncovered is lost).  Because vehicles wrap around
+    the closed road, the process continuously churns — each vehicle
+    leaves and re-enters coverage once per lap — while the stationary
+    active fraction stays ``1 - churn_rate``.  ``churn_rate=0`` is full
+    coverage (every client active, the synchronous baseline) and
+    ``churn_rate=1`` an empty fleet."""
+    return pos < (1.0 - churn_rate) * road_length_m

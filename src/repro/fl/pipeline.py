@@ -54,12 +54,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.rules import build_rule_table
-from repro.core.selection import (ccs_fuzzy_select, ccs_random_select,
-                                  dcs_select, selection_stats)
+from repro.core.selection import selection_stats
 from repro.fl.aggregation import fedavg_masked, fedavg_sums
 from repro.fl.client import (dataset_loss_packed, local_train_batch,
                              local_train_batch_donated)
-from repro.fl.mobility import positions_jax
+from repro.fl.mobility import coverage_active, positions_jax
+from repro.fl.schemes import get_scheme
 from repro.fl.network import (NetworkConfig, cwnd_loss_fields,
                               pinned_channel_shadow,
                               predicted_throughput_from_fields,
@@ -132,6 +132,11 @@ class StageConfig:
     # tests/test_probe_fuzzy.py; per-client losses may differ in the
     # last ulp (different — tighter — sample grouping).
     fused_probe: bool = False
+    # coverage-window churn rate (event-driven fleet, ISSUE 6): clients
+    # past (1-rate)*road_length are departed this round.  0.0 compiles
+    # the exact churn-free graph — the gating is a static branch, so the
+    # event server's sync-parity pin rests on an identical executable.
+    churn_rate: float = 0.0
 
 
 @functools.lru_cache(maxsize=None)
@@ -183,16 +188,10 @@ def evaluate(st: RoundStatics, feats_raw: jax.Array) -> jax.Array:
 
 def select(cfg: StageConfig, pos: jax.Array, evals: jax.Array,
            sel_key: jax.Array) -> jax.Array:
-    """Selection stage (Alg. 1 step 4) -> int32 mask (N,)."""
-    if cfg.scheme == "dcs":
-        return dcs_select(pos, evals, comm_range=cfg.comm_range_m,
-                          top_m=cfg.top_m, e_tau=cfg.e_tau)
-    if cfg.scheme == "ccs-fuzzy":
-        return ccs_fuzzy_select(evals, cfg.n_clients_central)
-    if cfg.scheme == "random":
-        return ccs_random_select(sel_key, cfg.n_clients,
-                                 cfg.n_clients_central)
-    raise ValueError(cfg.scheme)
+    """Selection stage (Alg. 1 step 4) -> int32 mask (N,).  Dispatches
+    through the scheme registry (``fl/schemes.py``) — unknown names
+    raise at trace time with the registered list."""
+    return get_scheme(cfg.scheme).select(cfg, pos, evals, sel_key)
 
 
 def deadline_filter(st: RoundStatics, cfg: StageConfig, pos: jax.Array,
@@ -205,6 +204,19 @@ def deadline_filter(st: RoundStatics, cfg: StageConfig, pos: jax.Array,
     ok = completes_before_deadline(cfg.timing, train_t, upload_t)
     selected = mask > 0
     return selected & ok, (selected & ~ok).sum()
+
+
+def completion_time_s(st: RoundStatics, cfg: StageConfig, pos: jax.Array,
+                      upload_key: jax.Array, t_s: jax.Array) -> jax.Array:
+    """Absolute per-client upload-completion instants (N,) — the event-
+    driven server's landing-tick input.  Draws the same shadow as
+    ``deadline_filter`` from the same key (XLA CSEs the duplicate inside
+    the jitted prefix), so ``t_done <= t_s + deadline`` iff the client
+    survives Eq. 6."""
+    train_t = training_time_s(cfg.timing, st.slowdown, st.n_valid)
+    upload_t = upload_time_s_jax(cfg.network, pos, cfg.model_bytes,
+                                 upload_key)
+    return t_s + train_t + upload_t
 
 
 def _prefix(st: RoundStatics, params: Params, rnd: jax.Array,
@@ -232,11 +244,38 @@ def _prefix(st: RoundStatics, params: Params, rnd: jax.Array,
     else:
         pos, feats = features(st, cfg, params, t_s, k_pred)
         evals = evaluate(st, feats)
+    # churn stage (event-driven fleet): departed clients neither report
+    # evaluations nor get selected.  Statically gated — churn_rate == 0
+    # compiles the exact pre-churn graph, which the event server's
+    # sync-parity pin (tests/test_async.py) rests on.
+    if cfg.churn_rate > 0.0:
+        active = coverage_active(pos, road_length_m=cfg.road_length_m,
+                                 churn_rate=cfg.churn_rate)
+        evals = jnp.where(active, evals, 0.0)
     mask = select(cfg, pos, evals, k_sel)
+    if cfg.churn_rate > 0.0:
+        mask = jnp.where(active, mask, 0)
     survivors, n_straggler = deadline_filter(st, cfg, pos, mask, k_upload)
+    # event-server inputs: absolute completion instants + presence at
+    # upload time (a client leaving coverage mid-training/upload loses
+    # its pending update)
+    t_done = completion_time_s(st, cfg, pos, k_upload, t_s)
+    if cfg.churn_rate > 0.0:
+        pos_done = positions_jax(st.x0, st.speeds, st.jitter_phase, t_done,
+                                 road_length_m=cfg.road_length_m,
+                                 speed_jitter=cfg.speed_jitter)
+        alive_at_done = coverage_active(pos_done,
+                                        road_length_m=cfg.road_length_m,
+                                        churn_rate=cfg.churn_rate)
+        n_active = active.sum()
+    else:
+        alive_at_done = jnp.ones_like(survivors)
+        n_active = jnp.asarray(cfg.n_clients, jnp.int32)
     stats = selection_stats(mask, evals)
     return {"pos": pos, "feats": feats, "evals": evals, "mask": mask,
             "survivors": survivors, "n_straggler": n_straggler,
+            "t_done": t_done, "alive_at_done": alive_at_done,
+            "n_active": n_active,
             "n_selected": stats["n_selected"],
             "n_survivor": survivors.sum(),
             "mean_eval_selected": stats["mean_eval_selected"]}
@@ -305,8 +344,8 @@ def cohort_bucket(k: int) -> int:
 def train_groups(params: Params, groups: Sequence[ClientGroup],
                  group_steps: Sequence[int], survivors: np.ndarray,
                  keys: jax.Array, *, epochs: int, batch_size: int,
-                 lr: float, prox_mu: float
-                 ) -> Optional[Tuple[Params, jax.Array]]:
+                 lr: float, prox_mu: float, return_entries: bool = False
+                 ) -> Optional[Tuple]:
     """Local-training stage (Eq. 1): one ``vmap(local_train)`` per
     capacity group over that group's surviving cohort.
 
@@ -320,10 +359,16 @@ def train_groups(params: Params, groups: Sequence[ClientGroup],
     The cohort tensors gathered here are fresh per call, so the trainer
     runs with ``donate_argnums`` on them — the (bucket, cap, ...)
     stacks' buffers are recycled into the trained-model outputs instead
-    of round-tripping through new allocations every round."""
+    of round-tripping through new allocations every round.
+
+    ``return_entries=True`` (the event-driven server's pool path)
+    returns ``(merged, weights (np), client_ids (np))`` instead — the
+    per-row global client ids let the caller split the stack's FedAvg
+    weights across aggregation ticks without re-gathering (padding rows
+    keep weight zero and duplicate the cohort head's id)."""
     if not survivors.any():
         return None
-    stacks, weights = [], []
+    stacks, weights, row_ids = [], [], []
     for gi, g in enumerate(groups):
         cohort = np.where(survivors[g.client_ids])[0]       # group-local
         k = len(cohort)
@@ -341,7 +386,10 @@ def train_groups(params: Params, groups: Sequence[ClientGroup],
         w[k:] = 0.0                          # padding duplicates drop out
         stacks.append(stacked)
         weights.append(w)
+        row_ids.append(g.client_ids[idx])
     merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *stacks)
+    if return_entries:
+        return merged, np.concatenate(weights), np.concatenate(row_ids)
     return merged, jnp.asarray(np.concatenate(weights))
 
 
@@ -464,11 +512,23 @@ def _sharded_prefix_fn(cfg: StageConfig, mesh: Mesh, seeds: bool):
                                 centers, normalize=True, col_maxima=col_max)
         evals = jnp.where(valid, evals, 0.0)
 
+        # churn stage (statically gated, exactly like the unsharded
+        # prefix): departed clients report no evaluation and cannot be
+        # selected; the active mask gathers with the evals so the
+        # selection sees the identical (N,) inputs
+        if cfg.churn_rate > 0.0:
+            active = coverage_active(pos, road_length_m=cfg.road_length_m,
+                                     churn_rate=cfg.churn_rate)
+            evals = jnp.where(active, evals, 0.0)
+
         # stage: selection on gathered (N,) scalars — the DCS election
         # window / CCS quota are the prefix's only all-to-all state
         ev_g = jax.lax.all_gather(evals, CLIENT_AXIS, tiled=True)[:n]
         pos_g = jax.lax.all_gather(pos, CLIENT_AXIS, tiled=True)[:n]
         mask_g = select(cfg, pos_g, ev_g, k_sel)
+        if cfg.churn_rate > 0.0:
+            act_g = jax.lax.all_gather(active, CLIENT_AXIS, tiled=True)[:n]
+            mask_g = jnp.where(act_g, mask_g, 0)
         mask = jax.lax.dynamic_slice_in_dim(jnp.pad(mask_g, (0, pad)),
                                             i * shard_n, shard_n)
 
@@ -482,8 +542,22 @@ def _sharded_prefix_fn(cfg: StageConfig, mesh: Mesh, seeds: bool):
         n_straggler = jax.lax.psum((selected & ~ok & valid).sum(),
                                    CLIENT_AXIS)
         n_survivor = jax.lax.psum(survivors.sum(), CLIENT_AXIS)
+        # event-server inputs, shard-local like the deadline stage
+        t_done = t_s + train_t + upload_t
+        if cfg.churn_rate > 0.0:
+            pos_done = positions_jax(x0, speeds, jphase, t_done,
+                                     road_length_m=cfg.road_length_m,
+                                     speed_jitter=cfg.speed_jitter)
+            alive_done = coverage_active(pos_done,
+                                         road_length_m=cfg.road_length_m,
+                                         churn_rate=cfg.churn_rate)
+            n_active = jax.lax.psum((active & valid).sum(), CLIENT_AXIS)
+        else:
+            alive_done = jnp.ones_like(survivors)
+            n_active = jnp.asarray(n, jnp.int32)
         stats = selection_stats(mask_g, ev_g)
         return (pos, feats, evals, mask, survivors, n_straggler,
+                t_done, alive_done, n_active,
                 stats["n_selected"], n_survivor,
                 stats["mean_eval_selected"])
 
@@ -502,8 +576,9 @@ def _sharded_prefix_fn(cfg: StageConfig, mesh: Mesh, seeds: bool):
                 s(None, CLIENT_AXIS),                # cwnd loss field
                 s(CLIENT_AXIS))                      # upload shadow
     out_specs = (s(CLIENT_AXIS), s(CLIENT_AXIS, None), s(CLIENT_AXIS),
-                 s(CLIENT_AXIS), s(CLIENT_AXIS),
-                 rep, rep, rep, rep)
+                 s(CLIENT_AXIS), s(CLIENT_AXIS), rep,
+                 s(CLIENT_AXIS), s(CLIENT_AXIS), rep,
+                 rep, rep, rep)
     body = core if not seeds else jax.vmap(
         core, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0,
                        None, 0, None, 0, 0))
@@ -553,12 +628,15 @@ def _sharded_prefix_fn(cfg: StageConfig, mesh: Mesh, seeds: bool):
             st.probe_counts, st.means, st.sigmas, st.level_centers,
             params, t_s, k_sel, pin_shadow,
             padc(loss_u, axis=loss_u.ndim - 1), padc(up_shadow))
-        pos, feats, evals, mask, survivors, n_strag, n_sel, n_surv, mev = out
+        (pos, feats, evals, mask, survivors, n_strag, t_done, alive,
+         n_active, n_sel, n_surv, mev) = out
         cut = (lambda x: x[:, :n]) if seeds else (lambda x: x[:n])
         return {"pos": cut(pos), "feats": cut(feats), "evals": cut(evals),
                 "mask": cut(mask), "survivors": cut(survivors),
-                "n_straggler": n_strag, "n_selected": n_sel,
-                "n_survivor": n_surv, "mean_eval_selected": mev}
+                "n_straggler": n_strag, "t_done": cut(t_done),
+                "alive_at_done": cut(alive), "n_active": n_active,
+                "n_selected": n_sel, "n_survivor": n_surv,
+                "mean_eval_selected": mev}
 
     return jax.jit(run)
 
@@ -654,13 +732,19 @@ def train_group_cohort_sharded(params: Params, group: ClientGroup,
 def train_groups_sharded(params: Params, groups: Sequence[ClientGroup],
                          group_steps: Sequence[int], survivors: np.ndarray,
                          keys: jax.Array, mesh: Mesh, *, epochs: int,
-                         batch_size: int, lr: float, prox_mu: float
+                         batch_size: int, lr: float, prox_mu: float,
+                         weight_scale: float = 1.0
                          ) -> Optional[Tuple[Params, jax.Array]]:
     """Mesh-sharded ``train_groups``: per capacity group, each device
     trains its shard of the surviving cohort; the Eq. 2 numerator/
     denominator accumulate across groups and devices (psum inside the
     trainer, plain adds across groups).  Returns the unnormalized
-    ``(sum_i w_i model_i, sum_i w_i)`` or None for an empty round."""
+    ``(sum_i w_i model_i, sum_i w_i)`` or None for an empty round.
+
+    ``weight_scale`` multiplies every cohort weight — the event-driven
+    server's per-tick staleness factor (one landing tick shares one
+    delay, hence one scalar).  The default 1.0 leaves the weights
+    bitwise untouched (the sync-parity pin)."""
     if not survivors.any():
         return None
     shards = mesh_client_shards(mesh)
@@ -673,6 +757,8 @@ def train_groups_sharded(params: Params, groups: Sequence[ClientGroup],
         bucket = cohort_bucket_sharded(k, shards)
         idx = np.concatenate([cohort, np.full(bucket - k, cohort[0])])
         w = g.n_valid[idx].astype(np.float32)
+        if weight_scale != 1.0:
+            w *= np.float32(weight_scale)
         w[k:] = 0.0                          # padding duplicates drop out
         num, den = train_group_cohort_sharded(
             params, g, group_steps[gi], idx, w,

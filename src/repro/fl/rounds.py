@@ -83,16 +83,20 @@ from repro.fl.mobility import FreewayMobility, MobilityConfig
 from repro.fl.network import NetworkConfig
 from repro.fl.partition import (PartitionConfig, partition, stack_clients,
                                 steps_per_epoch)
-from repro.fl.timing import TimingConfig
+from repro.fl.runconfig import ENGINES, RunConfig, resolve_run
+from repro.fl.schemes import get_scheme
 from repro.models.cnn import init_cnn
-
-ENGINES = ("batched", "loop")
 
 
 @dataclass
 class FLSimConfig:
-    scheme: str = "dcs"                  # dcs | ccs-fuzzy | random
-    engine: str = "batched"              # batched (vmapped) | loop (ref)
+    scheme: str = "dcs"                  # any registered scheme
+                                         # (fl/schemes.py; builtins:
+                                         # dcs | ccs-fuzzy | random)
+    # deprecated (one release): engine/fused_probe/overlap_rounds moved
+    # to RunConfig — a non-None value here still works but warns and is
+    # folded into the run config (repro.fl.runconfig.resolve_run)
+    engine: Optional[str] = None
     n_rounds: int = 20
     n_clients_central: int = 5           # CCS/random pick (Table 3)
     comm_range_m: float = 200.0
@@ -115,14 +119,9 @@ class FLSimConfig:
     uniform_capacity: bool = False       # True: single max-cap group (the
                                          # pre-grouping layout; benchmark
                                          # baseline only)
-    fused_probe: bool = False            # device-resident fused probe ->
-                                         # evaluate fast path + TIGHT probe
-                                         # packing (see StageConfig); masks
-                                         # pinned bit-identical to the
-                                         # default path in tests
-    overlap_rounds: bool = False         # round-ahead scheduler: run()
-                                         # dispatches round r+1's selection
-                                         # prefix while round r trains
+    fused_probe: Optional[bool] = None   # deprecated: RunConfig.fused_probe
+    overlap_rounds: Optional[bool] = None  # deprecated:
+                                         # RunConfig.overlap_rounds
     seed: int = 0
     partition: PartitionConfig = field(default_factory=PartitionConfig)
     mobility: MobilityConfig = field(default_factory=MobilityConfig)
@@ -131,10 +130,13 @@ class FLSimConfig:
 
 class FLSimulation:
     def __init__(self, cfg: FLSimConfig,
-                 evaluator: Optional[FuzzyEvaluator] = None):
-        if cfg.engine not in ENGINES:
-            raise ValueError(f"engine must be one of {ENGINES}: "
-                             f"{cfg.engine!r}")
+                 evaluator: Optional[FuzzyEvaluator] = None,
+                 run: Optional[RunConfig] = None):
+        # the execution profile: engine / fused probe / overlap / async
+        # axis — one RunConfig shared by all three entry points; the
+        # deprecated FLSimConfig kwargs fold in behind a warning
+        self.run_cfg = resolve_run(cfg, run)
+        get_scheme(cfg.scheme)               # unknown schemes raise here
         self.cfg = cfg
         # a live ("clients",) mesh axis partitions the in-round client
         # axis (sharded prefix + grouped trainer); captured at
@@ -168,7 +170,7 @@ class FLSimulation:
         # the full dataset is the memory bill, and each engine keeps only
         # the copy it reads: host arrays back the batched engine's cohort
         # gather, device arrays feed the loop engine's per-client calls
-        if cfg.engine != "batched":
+        if self.run_cfg.engine != "batched":
             self.groups = [dataclasses.replace(g,
                                                images=jnp.asarray(g.images),
                                                labels=jnp.asarray(g.labels))
@@ -217,18 +219,8 @@ class FLSimulation:
             level_centers=jnp.asarray(self.evaluator.level_centers, f32))
 
     def _build_stage_cfg(self) -> pipeline.StageConfig:
-        cfg = self.cfg
-        return pipeline.StageConfig(
-            scheme=cfg.scheme, n_clients=self.n,
-            comm_range_m=cfg.comm_range_m, top_m=cfg.top_m,
-            e_tau=cfg.e_tau, n_clients_central=cfg.n_clients_central,
-            model_bytes=cfg.model_bytes,
-            road_length_m=cfg.mobility.road_length_m,
-            speed_jitter=cfg.mobility.speed_jitter,
-            timing=TimingConfig(cfg.local_epochs, cfg.batch_size,
-                                deadline_s=cfg.deadline_s),
-            network=cfg.network, probe_batch=self._PROBE_BATCH,
-            fused_probe=cfg.fused_probe)
+        return self.run_cfg.to_stage_config(self.cfg, n_clients=self.n,
+                                        probe_batch=self._PROBE_BATCH)
 
     # ------------------------------------------------------------------
     _PROBE_BATCH = 128
@@ -266,7 +258,7 @@ class FLSimulation:
         probe = min(self.cfg.probe_samples, self.cap)
         take = np.minimum(self.n_valid, probe).astype(np.int64)
         batch = self._PROBE_BATCH
-        align = 1 if self.cfg.fused_probe else batch
+        align = 1 if self.run_cfg.fused_probe else batch
         shard_clients = pipeline.pad_to_shards(self.n,
                                                self.n_shards) // self.n_shards
         im_shape = self.groups[0].images.shape[2:]
@@ -335,21 +327,17 @@ class FLSimulation:
             st, self.params, jnp.int32(rnd), self.key,
             self.net_key, cfg=self.stage_cfg)
 
-    # the accumulated_time_s scheme key for each simulator scheme: the
-    # random baseline maintains classical full state (CFL), the others
-    # exchange evaluations (cloud vs DSRC)
-    _OVERHEAD_SCHEME = {"dcs": "dcs", "ccs-fuzzy": "ccs-fuzzy",
-                        "random": "cfl"}
-
     def _comm_accounting(self, n_selected: int) -> Dict[str, float]:
         """Per-round communication (bytes and time) per §4.2 / Fig. 9,
         routed through ``core/overhead.py`` so the simulator and the
         Fig. 2 / Fig. 9 analytics report consistent numbers — including
         the DUPLEX_FACTOR on state traffic and the IoVParams per-message
-        latencies (cloud vs DSRC)."""
+        latencies (cloud vs DSRC).  The accumulated-time model key comes
+        from the scheme registry: ``"cfl"`` schemes maintain classical
+        full state, the others exchange evaluations (cloud vs DSRC)."""
         cfg = self.cfg
-        state_bytes = (cfg.state_bytes if cfg.scheme == "random"
-                       else cfg.eval_bytes)
+        key = get_scheme(cfg.scheme).overhead_key
+        state_bytes = (cfg.state_bytes if key == "cfl" else cfg.eval_bytes)
         p = IoVParams(n_participants=self.n, clients_per_round=n_selected,
                       round_period_s=cfg.deadline_s,
                       model_bytes=cfg.model_bytes,
@@ -358,7 +346,6 @@ class FLSimulation:
                       eval_bytes_dcs=cfg.eval_bytes,
                       uplink_bps_best=cfg.network.best_rate_bps,
                       uplink_bps_worst=cfg.network.worst_rate_bps)
-        key = self._OVERHEAD_SCHEME[cfg.scheme]
         comm_t = accumulated_time_s(key, cfg.state_interval_s, p)
         upload_t = accumulated_time_s("model-only", cfg.state_interval_s, p)
         return {"state_bytes": state_maintenance_bytes(
@@ -408,7 +395,7 @@ class FLSimulation:
         central-selection budget, clipped to each group's size; a cohort
         that lands in an uncovered bucket still works — it just compiles
         on first use.  No-op for the loop engine."""
-        if self.cfg.engine != "batched":
+        if self.run_cfg.engine != "batched":
             return
         cfg = self.cfg
         if buckets is None:
@@ -491,7 +478,7 @@ class FLSimulation:
         survivors = np.asarray(host["survivors"])
         self.last_mask = np.asarray(host["mask"])
         keys = self._round_keys(rnd)
-        if self.cfg.engine == "batched":
+        if self.run_cfg.engine == "batched":
             self._train_batched(survivors, keys)
         else:
             self._train_loop(survivors, keys)
@@ -499,25 +486,41 @@ class FLSimulation:
     def _round_row(self, rnd: int, host: Dict, acc_count: jax.Array,
                    n_test: int) -> Dict[str, float]:
         """Resolve the round's metrics row (blocks on the accuracy
-        count — the round's second and last device read)."""
+        count — the round's second and last device read).
+
+        The async columns (active-fleet size, stale-update fraction,
+        effective cohort size, rounds-behind histogram) are emitted for
+        every server so the sweep CSV schema is uniform; under the
+        synchronous barrier they are the degenerate values (everything
+        active and on time) and the event server overrides them from its
+        tick counters."""
         n_selected = int(host["n_selected"])
         survivors = np.asarray(host["survivors"])
+        n_agg = int(survivors.sum())
         row = {"round": rnd,
                "accuracy": float(acc_count) / float(n_test),
                "n_selected": n_selected,
-               "n_aggregated": int(survivors.sum()),
+               "n_aggregated": n_agg,
                "n_straggler": int(host["n_straggler"]),
+               "n_active": int(host.get("n_active", self.n)),
+               "stale_frac": 0.0,
+               "n_effective": float(n_agg),
+               "rounds_behind_hist": f"{n_agg}/0/0/0",
                "mean_eval_selected": float(host["mean_eval_selected"])}
         row.update(self._comm_accounting(n_selected))
         return row
 
     def run(self, n_rounds: Optional[int] = None,
             overlap: Optional[bool] = None) -> List[Dict[str, float]]:
-        """Drive ``n`` rounds; ``overlap=True`` (or the config's
-        ``overlap_rounds``) uses the round-ahead scheduler."""
+        """Drive ``n`` rounds; ``overlap`` defaults to the run config's
+        round-ahead scheduler setting.  ``RunConfig(server="event")``
+        (or any async knob) routes through the event-driven server."""
         n = n_rounds or self.cfg.n_rounds
+        if self.run_cfg.server == "event":
+            from repro.fl.async_server import EventDrivenServer
+            return EventDrivenServer(self).run(n, overlap=overlap)
         if overlap is None:
-            overlap = self.cfg.overlap_rounds
+            overlap = self.run_cfg.overlap_rounds
         if not overlap:
             return [self.run_round(r) for r in range(n)]
         return self.run_overlapped(n)

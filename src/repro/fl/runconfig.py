@@ -1,0 +1,198 @@
+"""One ``RunConfig`` for every entry point (ISSUE 6 API consolidation).
+
+Execution knobs used to sprawl across three layers: ``fused_probe``
+lived on ``StageConfig`` *and* ``FLSimConfig`` *and* both launcher CLIs;
+the engine, mesh spec and round-overlap flags were duplicated the same
+way.  ``RunConfig`` is now the single owner of **how** a simulation
+executes — engine, fused probe, round overlap, client-mesh spec, and the
+event-driven server's churn/staleness/cadence axis — while
+``FLSimConfig`` keeps owning **what** is simulated (schemes, data,
+timing, network).  All three entry points construct from it:
+
+    FLSimulation(cfg, run=RunConfig(...))
+    repro.launch.fl_sim  --server event --churn-rate 0.3 ...
+    repro.launch.sweep   --churn-rates 0,0.3 --staleness-lambdas 0,1 ...
+
+The old ``FLSimConfig.engine/fused_probe/overlap_rounds`` constructor
+kwargs keep working for one release: ``resolve_run`` folds them into the
+``RunConfig`` behind a ``DeprecationWarning``.
+
+Defaults flipped by ISSUE 6 (both parity-pinned since ISSUE 5):
+``fused_probe=True`` (tight probe pack + fused probe->evaluate kernel)
+and ``overlap_rounds=True`` (round-ahead scheduler).  The legacy
+batch-aligned pack survives behind ``--compat-aligned-pack``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+ENGINES = ("batched", "loop")
+SERVERS = ("sync", "event")
+STALENESS_MODES = ("drop", "weighted")
+
+# FLSimConfig fields that moved here; ``resolve_run`` folds non-None
+# values into the RunConfig behind a DeprecationWarning
+DEPRECATED_SIM_FIELDS = ("engine", "fused_probe", "overlap_rounds")
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """How a simulation executes (vs ``FLSimConfig``: what it simulates).
+
+    Async axis (any non-default value promotes ``server`` to "event"):
+
+    - ``churn_rate``: fraction of the road outside RSU coverage; clients
+      whose position falls past ``(1-rate)*road_length`` are departed
+      for that round (no probe, no selection) and a client that leaves
+      coverage before its upload completes loses that update.
+    - ``staleness``: "drop" keeps the Eq. 6 hard deadline ({1 at
+      deadline, 0 after}); "weighted" trains stragglers too and folds
+      ``1/(1 + lambda * delay_rounds)`` into their FedAvg weight.
+    - ``agg_cadence_s``: the server aggregates every ``T_agg`` simulated
+      seconds instead of at the round barrier (None = round period)."""
+    engine: str = "batched"              # batched (vmapped) | loop (ref)
+    fused_probe: bool = True             # fused probe->evaluate + tight pack
+    overlap_rounds: bool = True          # round-ahead scheduler
+    mesh: Optional[str] = None           # "clients=K" client-mesh spec
+    server: str = "sync"                 # sync | event
+    churn_rate: float = 0.0              # 0 = full coverage, no churn
+    staleness: str = "drop"              # drop | weighted
+    staleness_lambda: float = 0.0        # weighted: 1/(1 + lambda * delay)
+    agg_cadence_s: Optional[float] = None  # None = round period (deadline_s)
+
+    def resolved(self) -> "RunConfig":
+        """Validate and normalize: any async knob promotes ``server`` to
+        "event" (churn and cadence semantics only exist there)."""
+        if self.engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}: "
+                             f"{self.engine!r}")
+        if self.server not in SERVERS:
+            raise ValueError(f"server must be one of {SERVERS}: "
+                             f"{self.server!r}")
+        if self.staleness not in STALENESS_MODES:
+            raise ValueError(f"staleness must be one of {STALENESS_MODES}: "
+                             f"{self.staleness!r}")
+        if not 0.0 <= self.churn_rate <= 1.0:
+            raise ValueError(f"churn_rate must be in [0, 1]: "
+                             f"{self.churn_rate}")
+        if self.staleness_lambda < 0.0:
+            raise ValueError(f"staleness_lambda must be >= 0: "
+                             f"{self.staleness_lambda}")
+        if self.agg_cadence_s is not None and self.agg_cadence_s <= 0.0:
+            raise ValueError(f"agg_cadence_s must be > 0: "
+                             f"{self.agg_cadence_s}")
+        server = self.server
+        if (self.churn_rate > 0.0 or self.staleness == "weighted"
+                or self.agg_cadence_s is not None):
+            server = "event"
+        if server == "event" and self.staleness == "weighted" \
+                and self.engine != "batched":
+            raise ValueError("staleness='weighted' trains stragglers "
+                             "through the batched engine; engine="
+                             f"{self.engine!r} is not supported")
+        if server != self.server:
+            return dataclasses.replace(self, server=server)
+        return self
+
+    def to_stage_config(self, cfg, *, n_clients: int, probe_batch: int = 128):
+        """Build the jit-static ``StageConfig`` from one ``FLSimConfig``
+        plus this run's device-level knobs (fused probe, churn)."""
+        from repro.fl.pipeline import StageConfig
+        from repro.fl.timing import TimingConfig
+        return StageConfig(
+            scheme=cfg.scheme, n_clients=n_clients,
+            comm_range_m=cfg.comm_range_m, top_m=cfg.top_m,
+            e_tau=cfg.e_tau, n_clients_central=cfg.n_clients_central,
+            model_bytes=cfg.model_bytes,
+            road_length_m=cfg.mobility.road_length_m,
+            speed_jitter=cfg.mobility.speed_jitter,
+            timing=TimingConfig(cfg.local_epochs, cfg.batch_size,
+                                deadline_s=cfg.deadline_s),
+            network=cfg.network, probe_batch=probe_batch,
+            fused_probe=self.fused_probe,
+            churn_rate=self.churn_rate)
+
+    @classmethod
+    def from_args(cls, args, base: Optional["RunConfig"] = None
+                  ) -> "RunConfig":
+        """Build from an argparse namespace (``add_run_arguments``).
+        Absent attributes keep the ``base`` (default) values, so any CLI
+        that exposes a subset of the flags still resolves."""
+        run = base or cls()
+        kw = {}
+        fused = run.fused_probe or bool(getattr(args, "fused_probe", False))
+        if getattr(args, "compat_aligned_pack", False):
+            fused = False
+        kw["fused_probe"] = fused
+        overlap = run.overlap_rounds or bool(getattr(args, "overlap_rounds",
+                                                     False))
+        if getattr(args, "no_overlap_rounds", False):
+            overlap = False
+        kw["overlap_rounds"] = overlap
+        for attr, field in (("engine", "engine"), ("mesh", "mesh"),
+                            ("server", "server"),
+                            ("staleness", "staleness"),
+                            ("churn_rate", "churn_rate"),
+                            ("staleness_lambda", "staleness_lambda"),
+                            ("agg_cadence", "agg_cadence_s")):
+            v = getattr(args, attr, None)
+            if v is not None:
+                kw[field] = v
+        if kw.get("agg_cadence_s") == 0.0:       # CLI "0" = round period
+            kw["agg_cadence_s"] = None
+        return dataclasses.replace(run, **kw).resolved()
+
+
+def add_run_arguments(ap) -> None:
+    """Install the shared ``RunConfig`` flags on an argparse parser
+    (consumed by ``RunConfig.from_args``)."""
+    ap.add_argument("--mesh", default=None, metavar="clients=K",
+                    help="partition the in-round client axis over K "
+                         "devices (CPU: emulated host devices)")
+    ap.add_argument("--fused-probe", action="store_true",
+                    help="deprecated no-op: the fused probe->evaluate "
+                         "fast path is the default now")
+    ap.add_argument("--compat-aligned-pack", action="store_true",
+                    help="legacy batch-aligned probe pack + unfused "
+                         "staged probe (the pre-ISSUE-6 default)")
+    ap.add_argument("--overlap-rounds", action="store_true",
+                    help="deprecated no-op: the round-ahead scheduler "
+                         "is the default now")
+    ap.add_argument("--no-overlap-rounds", action="store_true",
+                    help="serial round dispatch (disable the round-ahead "
+                         "scheduler)")
+    ap.add_argument("--server", choices=SERVERS, default=None,
+                    help="sync round barrier (default) or the "
+                         "event-driven streaming server")
+    ap.add_argument("--churn-rate", type=float, default=None,
+                    help="coverage-window churn rate in [0,1] "
+                         "(implies --server event)")
+    ap.add_argument("--staleness", choices=STALENESS_MODES, default=None,
+                    help="straggler policy: drop (Eq. 6 hard deadline) "
+                         "or weighted (1/(1+lambda*delay_rounds))")
+    ap.add_argument("--staleness-lambda", type=float, default=None,
+                    help="staleness decay lambda for --staleness weighted")
+    ap.add_argument("--agg-cadence", type=float, default=None,
+                    help="aggregation cadence T_agg in simulated seconds "
+                         "(0 = the round period; implies --server event)")
+
+
+def resolve_run(sim_cfg, run: Optional[RunConfig] = None) -> RunConfig:
+    """Resolve the effective ``RunConfig`` for a simulation, folding in
+    the deprecated ``FLSimConfig`` execution kwargs (one-release
+    compatibility shim)."""
+    run = run if run is not None else RunConfig()
+    overrides = {}
+    for name in DEPRECATED_SIM_FIELDS:
+        v = getattr(sim_cfg, name, None)
+        if v is not None:
+            warnings.warn(
+                f"FLSimConfig.{name} is deprecated; pass "
+                f"RunConfig({name}={v!r}) to FLSimulation(..., run=...) "
+                f"instead", DeprecationWarning, stacklevel=3)
+            overrides[name] = v
+    if overrides:
+        run = dataclasses.replace(run, **overrides)
+    return run.resolved()

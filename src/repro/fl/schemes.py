@@ -1,0 +1,95 @@
+"""Client-selection scheme registry (paper Alg. 1 step 4, pluggable).
+
+The three paper schemes — DCS neighbour election, centralized fuzzy
+top-n, centralized uniform random — used to be a hard-coded three-way
+string match inside ``fl/pipeline.select`` (and a parallel overhead-key
+dict in ``fl/rounds.py``).  This registry makes them data: a scheme is a
+name bound to a pure selection function plus the §4.2 communication-
+accounting key, and future schemes (FedCLF-style calibrated selection,
+FairEquityFL quotas, ...) plug in with ``register_scheme`` without
+touching the pipeline.
+
+A scheme's ``select`` function must be jax-traceable (it runs inside the
+jitted selection prefix, including its vmapped and shard_map'd forms)
+with signature ``(cfg: StageConfig, pos (N,), evals (N,), key) -> (N,)
+int32 mask``.  ``overhead_key`` picks the ``core/overhead.py``
+accumulated-time model: ``"cfl"`` maintains classical full client state
+(the random baseline), ``"ccs-fuzzy"`` exchanges evaluations via the
+cloud, ``"dcs"`` exchanges evaluations over DSRC.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+
+from repro.core.selection import (ccs_fuzzy_select, ccs_random_select,
+                                  dcs_select)
+
+# (cfg, pos, evals, sel_key) -> int32 mask (N,)
+SelectFn = Callable[[Any, jax.Array, jax.Array, jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Scheme:
+    """One registered selection scheme."""
+    name: str
+    select: SelectFn
+    overhead_key: str             # core/overhead.py accumulated-time key
+
+
+_REGISTRY: Dict[str, Scheme] = {}
+
+
+def register_scheme(name: str, fn: SelectFn, *,
+                    overhead_key: str = "ccs-fuzzy",
+                    overwrite: bool = False) -> Scheme:
+    """Register ``fn`` as selection scheme ``name``.
+
+    Re-registering an existing name raises unless ``overwrite=True`` —
+    silent replacement of a builtin would skew every consumer of the
+    registry (pipeline, simulator, sweep CLI) at a distance."""
+    if not name or not isinstance(name, str):
+        raise ValueError(f"scheme name must be a non-empty str: {name!r}")
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"scheme {name!r} is already registered "
+                         f"(pass overwrite=True to replace)")
+    scheme = Scheme(name=name, select=fn, overhead_key=overhead_key)
+    _REGISTRY[name] = scheme
+    return scheme
+
+
+def get_scheme(name: str) -> Scheme:
+    """Look up a registered scheme; unknown names raise with the list."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown selection scheme {name!r} "
+            f"(registered: {', '.join(scheme_names())})") from None
+
+
+def scheme_names() -> Tuple[str, ...]:
+    """Registered scheme names, registration order."""
+    return tuple(_REGISTRY)
+
+
+# -- the paper's three schemes ----------------------------------------------
+
+def _dcs(cfg, pos, evals, sel_key):
+    return dcs_select(pos, evals, comm_range=cfg.comm_range_m,
+                      top_m=cfg.top_m, e_tau=cfg.e_tau)
+
+
+def _ccs_fuzzy(cfg, pos, evals, sel_key):
+    return ccs_fuzzy_select(evals, cfg.n_clients_central)
+
+
+def _ccs_random(cfg, pos, evals, sel_key):
+    return ccs_random_select(sel_key, cfg.n_clients, cfg.n_clients_central)
+
+
+register_scheme("dcs", _dcs, overhead_key="dcs")
+register_scheme("ccs-fuzzy", _ccs_fuzzy, overhead_key="ccs-fuzzy")
+register_scheme("random", _ccs_random, overhead_key="cfl")

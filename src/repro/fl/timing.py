@@ -43,6 +43,23 @@ def completes_before_deadline(cfg: TimingConfig, train_s: np.ndarray,
     return (train_s + upload_s) <= cfg.deadline_s
 
 
+def staleness_weight(lam: float, delay_rounds) -> np.ndarray:
+    """Staleness-weighted aggregation weight ``1 / (1 + lambda * d)``
+    for an update aggregated ``d`` rounds after the round whose global
+    model it was trained from (event-driven server, ISSUE 6).
+
+    ``d = 0`` (on time) always weighs 1; ``lam = 0`` disables the decay
+    (every late update counts fully); works on scalars and arrays.  The
+    hard-deadline Eq. 6 policy is the ``lam -> inf`` limit restricted to
+    {1 at deadline, 0 after} — the event server's "drop" mode pins that
+    limit exactly rather than approximating it."""
+    if lam < 0.0:
+        raise ValueError(f"staleness lambda must be >= 0: {lam}")
+    if np.any(np.asarray(delay_rounds) < 0):
+        raise ValueError(f"delay_rounds must be >= 0: {delay_rounds}")
+    return 1.0 / (1.0 + lam * delay_rounds)
+
+
 def measure_b_exe(batch_size: int = 20, repeats: int = 3) -> float:
     """Measure B_exe for the paper's CNN on *this* host (DESIGN.md §4)."""
     import time

@@ -4,6 +4,14 @@ Usage:
   PYTHONPATH=src python -m repro.launch.fl_sim --scheme dcs --rounds 10
   PYTHONPATH=src python -m repro.launch.fl_sim --scheme all --fast
   PYTHONPATH=src python -m repro.launch.fl_sim --mesh clients=8 --rounds 5
+  PYTHONPATH=src python -m repro.launch.fl_sim --server event \\
+      --churn-rate 0.3 --staleness weighted --staleness-lambda 1.0
+
+Execution knobs (engine / fused probe / round overlap / mesh / the
+event-driven server's churn, staleness and cadence axis) live on the
+shared ``RunConfig`` (``fl/runconfig.py``) — the same flags drive
+``launch/sweep.py``, and library callers pass the identical object to
+``FLSimulation(cfg, run=...)``.
 
 ``--mesh clients=K`` partitions the in-round client axis over K devices:
 the selection prefix runs shard_map'd (``selection_prefix_sharded``) and
@@ -44,6 +52,10 @@ def paper_config(scheme: str, **kw):
 
 
 def main(argv=None) -> int:
+    # argparse only below — jax must not initialize before the mesh
+    # context can force emulated host devices
+    from repro.fl.runconfig import add_run_arguments
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--scheme", choices=SCHEMES + ("all",), default="dcs")
     ap.add_argument("--rounds", type=int, default=10)
@@ -52,15 +64,8 @@ def main(argv=None) -> int:
     ap.add_argument("--classes-per-client", type=int, default=9)
     ap.add_argument("--distribution", choices=("uniform", "extreme"),
                     default="uniform")
-    ap.add_argument("--mesh", default=None, metavar="clients=K",
-                    help="partition the in-round client axis over K "
-                         "devices (CPU: emulated host devices)")
-    ap.add_argument("--fused-probe", action="store_true",
-                    help="fused probe->evaluate fast path + tight probe "
-                         "packing (selection masks bit-identical)")
-    ap.add_argument("--overlap-rounds", action="store_true",
-                    help="round-ahead scheduler: dispatch round r+1's "
-                         "selection prefix while round r trains")
+    add_run_arguments(ap)        # mesh / fused probe / overlap / server /
+    #                              churn / staleness / cadence (RunConfig)
     ap.add_argument("--out", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -72,9 +77,16 @@ def main(argv=None) -> int:
     with client_mesh_context(args.mesh) as mesh:
         from repro.fl.mobility import MobilityConfig
         from repro.fl.rounds import FLSimulation
+        from repro.fl.runconfig import RunConfig
         if mesh is not None:
             print(f"[fl_sim] client mesh: {dict(mesh.shape)} over "
                   f"{mesh.devices.size} devices", flush=True)
+        run = RunConfig.from_args(args)
+        if run.server == "event":
+            print(f"[fl_sim] event-driven server: churn={run.churn_rate} "
+                  f"staleness={run.staleness} lam={run.staleness_lambda} "
+                  f"cadence={run.agg_cadence_s or 'round period'}",
+                  flush=True)
 
         schemes = SCHEMES if args.scheme == "all" else (args.scheme,)
         results = {}
@@ -86,9 +98,7 @@ def main(argv=None) -> int:
                 if not args.paper_profile else mk(scheme, seed=args.seed)
             cfg.mobility = MobilityConfig(distribution=args.distribution,
                                           seed=args.seed)
-            cfg.fused_probe = args.fused_probe
-            cfg.overlap_rounds = args.overlap_rounds
-            sim = FLSimulation(cfg)
+            sim = FLSimulation(cfg, run=run)
             t0 = time.time()
             hist = sim.run(args.rounds)
             dt = time.time() - t0

@@ -1,20 +1,32 @@
 """Sharded multi-seed sweep over (scheme x classes-per-client x
-distribution) — the paper's Figs. 6-9 evaluation grid with error bars.
+distribution x async scenario) — the paper's Figs. 6-9 evaluation grid
+with error bars, plus the event-driven fleet axis (ISSUE 6).
 
   PYTHONPATH=src python -m repro.launch.sweep --fast --seeds 2
   PYTHONPATH=src python -m repro.launch.sweep --fast --seeds 3 \\
       --classes 9,6,2 --distributions uniform,extreme --out grid.csv
+  PYTHONPATH=src python -m repro.launch.sweep --fast --seeds 2 \\
+      --churn-rates 0,0.3 --staleness-lambdas 0,1 --agg-cadences 0,30
 
 Each **cell** is a whole (scheme, classes_per_client, distribution,
-seed) simulation.  The harness exploits the staged round pipeline
-(``fl/pipeline.py``) on two axes:
+seed) simulation; the async flags add a **scenario** axis — every
+(churn rate x staleness lambda x aggregation cadence) combination runs
+the full cell grid through the event-driven server
+(``fl/async_server.py``) and lands in the same tidy CSV with the
+streaming columns (active fleet size, stale-update fraction, effective
+cohort size, rounds-behind histogram).  The all-defaults scenario is
+the synchronous round barrier, bit-identical to a sweep with no async
+flags at all.
+
+The harness exploits the staged round pipeline (``fl/pipeline.py``) on
+two axes:
 
 - **seeds are vmapped**: all seeds of a cell group share one
   ``StageConfig`` (the jit-static), so their selection prefixes run as a
   single ``selection_prefix_seeds`` dispatch per round — one compiled
   program evaluates S seeds' probe/evaluate/select/deadline stages at
   once.  Training still runs per seed (cohorts differ), through the same
-  ``FLSimulation.finish_round`` the single-seed driver uses.
+  ``finish_round`` the single-seed drivers use.
 - **cell groups are distributed**: groups are placed round-robin over
   ``repro.sharding.api.sweep_devices()`` (the active mesh's devices, or
   all local devices) via ``jax.default_device`` — this spreads *memory*
@@ -31,17 +43,25 @@ seed) simulation.  The harness exploits the staged round pipeline
   domain (``sweep_devices`` collapses to a single entry), and worker
   processes each rebuild the same mesh from the spec.
 
-Output: ONE tidy CSV, one row per (cell, round), with per-seed metrics
-plus mean +/- std columns aggregated across the group's seeds (constant
-within a (round, scheme, classes, distribution) group) — directly
-plottable as the error-bar curves of Figs. 6-8.  Byte/time columns come
-from the ``core/overhead.py``-reconciled accounting (Fig. 9).  Rows are
-emitted in a deterministic order and with fixed float formatting, so a
-repeated sweep is bitwise identical (tests/test_sweep.py).
+Execution knobs (engine, fused probe, overlap, mesh, server/churn/
+staleness/cadence) all live on ONE ``RunConfig``
+(``fl/runconfig.py``) shared with ``FLSimulation`` and
+``launch/fl_sim.py`` — the scenario axis is just
+``dataclasses.replace`` over that config.
+
+Output: ONE tidy CSV, one row per (cell, scenario, round), with
+per-seed metrics plus mean +/- std columns aggregated across the
+group's seeds (constant within a (round, scheme, classes, distribution,
+scenario) group) — directly plottable as the error-bar curves of
+Figs. 6-8.  Byte/time columns come from the
+``core/overhead.py``-reconciled accounting (Fig. 9).  Rows are emitted
+in a deterministic order and with fixed float formatting, so a repeated
+sweep is bitwise identical (tests/test_sweep.py).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import io
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -51,19 +71,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fl import pipeline
+from repro.fl.async_server import EventDrivenServer
 from repro.fl.client import evaluate_accuracy_async
 from repro.fl.mobility import MobilityConfig
 from repro.fl.partition import PartitionConfig
 from repro.fl.rounds import FLSimConfig, FLSimulation
+from repro.fl.runconfig import RunConfig, add_run_arguments
 from repro.sharding.api import sweep_devices
 
 SCHEMES = ("dcs", "ccs-fuzzy", "random")
 
-# one row per (cell, round): cell identity + per-seed metrics + the
-# across-seed aggregates (constant within a seed group)
+# one row per (cell, scenario, round): cell identity + the async
+# scenario coordinates + per-seed metrics + the across-seed aggregates
+# (constant within a seed group).  agg_cadence_s reports 0 for "round
+# period" (RunConfig's None) so the column stays numeric.
 CSV_COLUMNS = (
     "round", "scheme", "seed", "classes_per_client", "distribution",
+    "churn_rate", "staleness_lambda", "agg_cadence_s",
     "accuracy", "n_selected", "n_aggregated", "n_straggler",
+    "n_active", "stale_frac", "n_effective", "rounds_behind_hist",
     "mean_eval_selected", "state_bytes", "upload_bytes", "state_time_s",
     "comm_time_s",
     "accuracy_mean", "accuracy_std", "n_selected_mean", "n_selected_std",
@@ -71,11 +97,19 @@ CSV_COLUMNS = (
 )
 
 _FMT = {"accuracy": "{:.6f}", "mean_eval_selected": "{:.4f}",
+        "churn_rate": "{:.3f}", "staleness_lambda": "{:.4g}",
+        "agg_cadence_s": "{:.6g}",
+        "stale_frac": "{:.4f}", "n_effective": "{:.4f}",
         "state_bytes": "{:.6g}", "upload_bytes": "{:.6g}",
         "state_time_s": "{:.6g}", "comm_time_s": "{:.6g}",
         "accuracy_mean": "{:.6f}", "accuracy_std": "{:.6f}",
         "n_selected_mean": "{:.4f}", "n_selected_std": "{:.4f}",
         "n_straggler_mean": "{:.4f}", "n_straggler_std": "{:.4f}"}
+
+# the key that identifies one seed group in the tidy output: a cell
+# plus its async scenario coordinates
+_GROUP_KEY = ("round", "scheme", "classes_per_client", "distribution",
+              "churn_rate", "staleness_lambda", "agg_cadence_s")
 
 # sweep cell group: every seed of one (scheme, classes, distribution)
 Group = Tuple[str, int, str]
@@ -113,26 +147,40 @@ def run_seed_group(scheme: str, classes_per_client: int, distribution: str,
                    seeds: Sequence[int], rounds: int,
                    cfg_fn: ConfigFn = fast_cell_config,
                    vmap_prefix: bool = True,
-                   overlap: bool = False) -> List[Dict]:
+                   overlap: Optional[bool] = None,
+                   run: Optional[RunConfig] = None) -> List[Dict]:
     """Run every seed of one cell group for ``rounds`` rounds.
+
+    ``run`` is the shared execution profile (``RunConfig``): the sync
+    drivers complete each round through ``FLSimulation``; any async knob
+    routes training and aggregation through the cell's
+    ``EventDrivenServer`` instead — the seed-vmapped prefix dispatch is
+    identical either way (the event axis only changes what happens after
+    the cohort gather).
 
     When the seeds share a ``StageConfig`` (they do by construction —
     only arrays differ), their selection prefixes are evaluated in ONE
     vmapped dispatch per round; per-seed training and aggregation then
-    complete each round through ``FLSimulation.finish_round``.
+    complete each round through the driver's ``finish_round``.
 
-    ``overlap=True`` is the round-ahead scheduler: the prefix is pure in
-    ``(statics, params, rnd, keys)`` and the per-seed params become
-    device futures the moment the trainers are enqueued, so round r+1's
-    (vmapped) selection dispatch is issued right after round r's
-    training — before round r's accuracy metrics are read.  The vmapped
-    dispatch then runs with ``donate_argnums`` on the seed-stacked
-    params (a fresh (S, ...) stack every round).  Rows are bit-identical
-    to the serial schedule — same ops, same order, earlier enqueue."""
+    ``overlap`` (default: the run config's ``overlap_rounds``) is the
+    round-ahead scheduler: the prefix is pure in ``(statics, params,
+    rnd, keys)`` and the per-seed params become device futures the
+    moment the trainers are enqueued, so round r+1's (vmapped)
+    selection dispatch is issued right after round r's training —
+    before round r's accuracy metrics are read.  The vmapped dispatch
+    then runs with ``donate_argnums`` on the seed-stacked params (a
+    fresh (S, ...) stack every round).  Rows are bit-identical to the
+    serial schedule — same ops, same order, earlier enqueue."""
+    run = (run if run is not None else RunConfig()).resolved()
+    if overlap is None:
+        overlap = run.overlap_rounds
     sims = [FLSimulation(cfg_fn(scheme, classes_per_client, distribution,
-                                seed)) for seed in seeds]
+                                seed), run=run) for seed in seeds]
     if not sims:
         return []
+    drivers = [EventDrivenServer(sim) if run.server == "event" else sim
+               for sim in sims]
     cfg0 = sims[0].stage_cfg
     use_vmap = (vmap_prefix and len(sims) > 1
                 and all(s.stage_cfg == cfg0 for s in sims))
@@ -163,7 +211,13 @@ def run_seed_group(scheme: str, classes_per_client: int, distribution: str,
     def meta(seed: int, row: Dict) -> Dict:
         return {"scheme": scheme, "seed": seed,
                 "classes_per_client": classes_per_client,
-                "distribution": distribution, **row}
+                "distribution": distribution,
+                "churn_rate": run.churn_rate,
+                "staleness_lambda": run.staleness_lambda,
+                "agg_cadence_s": (run.agg_cadence_s
+                                  if run.agg_cadence_s is not None
+                                  else 0.0),
+                **row}
 
     rows: List[Dict] = []
     states = None
@@ -173,19 +227,19 @@ def run_seed_group(scheme: str, classes_per_client: int, distribution: str,
         nxt = None
         if overlap:
             hosts = [jax.device_get(s) for s in states]
-            for sim, host in zip(sims, hosts):       # train dispatch
-                sim._dispatch_training(r, host)
+            for drv, host in zip(drivers, hosts):    # train dispatch
+                drv._dispatch_training(r, host)
             pend = [evaluate_accuracy_async(sim.params, sim.test_images,
                                             sim.test_labels, batch=256)
                     for sim in sims]
             if r + 1 < rounds:                       # round-ahead
                 nxt = dispatch(r + 1)
-            for seed, sim, host, (acc, nt) in zip(seeds, sims, hosts,
+            for seed, drv, host, (acc, nt) in zip(seeds, drivers, hosts,
                                                   pend):
-                rows.append(meta(seed, sim._round_row(r, host, acc, nt)))
+                rows.append(meta(seed, drv._round_row(r, host, acc, nt)))
         else:
-            for seed, sim, state in zip(seeds, sims, states):
-                rows.append(meta(seed, sim.finish_round(r, state)))
+            for seed, drv, state in zip(seeds, drivers, states):
+                rows.append(meta(seed, drv.finish_round(r, state)))
         states = nxt
     return rows
 
@@ -193,17 +247,15 @@ def run_seed_group(scheme: str, classes_per_client: int, distribution: str,
 def aggregate_rows(rows: List[Dict]) -> List[Dict]:
     """Attach across-seed mean/std columns to every per-seed row (tidy:
     the aggregate is repeated within its (round, scheme, classes,
-    distribution) group)."""
+    distribution, scenario) group)."""
     groups: Dict[Tuple, List[Dict]] = {}
     for row in rows:
-        key = (row["round"], row["scheme"], row["classes_per_client"],
-               row["distribution"])
+        # .get: rows from older callers may lack the scenario columns
+        key = tuple(row.get(k) for k in _GROUP_KEY)
         groups.setdefault(key, []).append(row)
     out = []
     for row in rows:
-        key = (row["round"], row["scheme"], row["classes_per_client"],
-               row["distribution"])
-        grp = groups[key]
+        grp = groups[tuple(row.get(k) for k in _GROUP_KEY)]
         agg = {}
         for metric in ("accuracy", "n_selected", "n_straggler"):
             vals = np.asarray([g[metric] for g in grp], np.float64)
@@ -219,11 +271,13 @@ def aggregate_rows(rows: List[Dict]) -> List[Dict]:
 
 def rows_to_csv(rows: List[Dict]) -> str:
     """Deterministic tidy CSV: fixed column order, fixed float formats,
-    rows sorted by (scheme, classes, distribution, seed, round)."""
+    rows sorted by (scheme, classes, distribution, scenario, seed,
+    round)."""
     buf = io.StringIO()
     buf.write(",".join(CSV_COLUMNS) + "\n")
     for row in sorted(rows, key=lambda r: (
             r["scheme"], r["classes_per_client"], r["distribution"],
+            r["churn_rate"], r["staleness_lambda"], r["agg_cadence_s"],
             r["seed"], r["round"])):
         cells = []
         for col in CSV_COLUMNS:
@@ -233,92 +287,106 @@ def rows_to_csv(rows: List[Dict]) -> str:
     return buf.getvalue()
 
 
-def fused_cell_config(scheme: str, classes_per_client: int,
-                      distribution: str, seed: int) -> FLSimConfig:
-    """``fast_cell_config`` with the fused probe->evaluate fast path on
-    (module-level so it pickles across ``--workers`` boundaries)."""
-    cfg = fast_cell_config(scheme, classes_per_client, distribution, seed)
-    cfg.fused_probe = True
-    return cfg
-
-
-def fused_paper_cell_config(scheme: str, classes_per_client: int,
-                            distribution: str, seed: int) -> FLSimConfig:
-    """``paper_cell_config`` with the fused fast path on."""
-    cfg = paper_cell_config(scheme, classes_per_client, distribution, seed)
-    cfg.fused_probe = True
-    return cfg
-
-
-# base profile -> fused twin (the --fused-probe flag's lookup)
-_FUSED_CFG = {fast_cell_config: fused_cell_config,
-              paper_cell_config: fused_paper_cell_config}
-
-
 def _run_group_worker(args: Tuple) -> List[Dict]:
     """Top-level (picklable) worker: one cell group, serial in-process.
     ``mesh_spec`` (a ``--mesh`` string; Mesh objects don't pickle)
-    rebuilds the client mesh inside the worker's own jax runtime."""
+    rebuilds the client mesh inside the worker's own jax runtime; the
+    frozen ``RunConfig`` pickles by value."""
     scheme, classes, dist, seeds, rounds, cfg_fn, vmap_prefix, \
-        mesh_spec, overlap = args
+        mesh_spec, overlap, run = args
     from repro.launch.mesh import client_mesh_context
     with client_mesh_context(mesh_spec):
         return run_seed_group(scheme, classes, dist, seeds, rounds,
                               cfg_fn=cfg_fn, vmap_prefix=vmap_prefix,
-                              overlap=overlap)
+                              overlap=overlap, run=run)
 
 
 def sweep(schemes: Sequence[str], classes_list: Sequence[int],
           distributions: Sequence[str], seeds: Sequence[int], rounds: int,
           cfg_fn: ConfigFn = fast_cell_config, vmap_prefix: bool = True,
           workers: int = 1, mesh_spec: Optional[str] = None,
-          overlap: bool = False,
+          overlap: Optional[bool] = None,
+          runs: Optional[Sequence[RunConfig]] = None,
           log: Optional[Callable[[str], None]] = None) -> List[Dict]:
-    """Run the full grid and return aggregated tidy rows.
+    """Run the full grid — every cell under every async scenario — and
+    return aggregated tidy rows.
 
-    Cell groups are placed round-robin over ``sweep_devices()`` (serial
-    fallback on one device; a clients mesh is one placement domain);
-    ``workers > 1`` additionally fans groups
-    out over spawn-based processes (each worker owns its device runtime,
-    so the device placement is left to the workers; ``cfg_fn`` crosses
-    the process boundary by reference, so it must be a module-level
-    function — a closure fails loudly at submission, never silently
-    switching profiles).  ``mesh_spec`` crosses as the ``--mesh`` string
-    and is activated inside each worker (the parent's forced-device env
-    is inherited by the spawned children)."""
+    ``runs`` is the scenario axis: one ``RunConfig`` per (churn rate x
+    staleness lambda x aggregation cadence) combination (default: the
+    single all-defaults sync scenario).  Cell-x-scenario groups are
+    placed round-robin over ``sweep_devices()`` (serial fallback on one
+    device; a clients mesh is one placement domain); ``workers > 1``
+    additionally fans groups out over spawn-based processes (each worker
+    owns its device runtime, so the device placement is left to the
+    workers; ``cfg_fn`` crosses the process boundary by reference, so it
+    must be a module-level function — a closure fails loudly at
+    submission, never silently switching profiles).  ``mesh_spec``
+    crosses as the ``--mesh`` string and is activated inside each worker
+    (the parent's forced-device env is inherited by the spawned
+    children)."""
     log = log or (lambda s: None)
-    groups: List[Group] = [(s, c, d) for s in schemes for c in classes_list
-                           for d in distributions]
+    runs = tuple(runs) if runs else (RunConfig().resolved(),)
+    jobs: List[Tuple[Group, RunConfig]] = [
+        ((s, c, d), run) for run in runs for s in schemes
+        for c in classes_list for d in distributions]
     rows: List[Dict] = []
     if workers > 1:
         import multiprocessing as mp
         from concurrent.futures import ProcessPoolExecutor
-        jobs = [(s, c, d, tuple(seeds), rounds, cfg_fn, vmap_prefix,
-                 mesh_spec, overlap)
-                for (s, c, d) in groups]
+        work = [(s, c, d, tuple(seeds), rounds, cfg_fn, vmap_prefix,
+                 mesh_spec, overlap, run)
+                for (s, c, d), run in jobs]
         with ProcessPoolExecutor(
                 max_workers=workers,
                 mp_context=mp.get_context("spawn")) as pool:
-            for (s, c, d), got in zip(groups,
-                                      pool.map(_run_group_worker, jobs)):
-                log(f"[sweep] {s} classes={c} {d}: {len(got)} rows")
+            for ((s, c, d), run), got in zip(
+                    jobs, pool.map(_run_group_worker, work)):
+                log(f"[sweep] {s} classes={c} {d} "
+                    f"churn={run.churn_rate} lam={run.staleness_lambda}: "
+                    f"{len(got)} rows")
                 rows.extend(got)
         return aggregate_rows(rows)
 
     devices = sweep_devices()
-    for i, (scheme, classes, dist) in enumerate(groups):
+    for i, ((scheme, classes, dist), run) in enumerate(jobs):
         dev = devices[i % len(devices)]
         t0 = time.time()
         with jax.default_device(dev):
             got = run_seed_group(scheme, classes, dist, seeds, rounds,
                                  cfg_fn=cfg_fn, vmap_prefix=vmap_prefix,
-                                 overlap=overlap)
+                                 overlap=overlap, run=run)
         rows.extend(got)
         accs = [r["accuracy"] for r in got if r["round"] == rounds - 1]
-        log(f"[sweep] {scheme} classes={classes} {dist} on {dev}: "
+        log(f"[sweep] {scheme} classes={classes} {dist} "
+            f"churn={run.churn_rate} lam={run.staleness_lambda} "
+            f"cadence={run.agg_cadence_s or 0} on {dev}: "
             f"final acc {np.mean(accs):.3f} +/- {np.std(accs):.3f} "
             f"({len(seeds)} seeds, {time.time() - t0:.0f}s)")
     return aggregate_rows(rows)
+
+
+def scenario_runs(base: RunConfig, churn_rates: Sequence[float],
+                  staleness_lambdas: Sequence[float],
+                  agg_cadences: Sequence[float]) -> List[RunConfig]:
+    """The async scenario axis: every (churn x lambda x cadence) combo
+    as a ``RunConfig`` derived from ``base``.  A lambda of 0 keeps the
+    hard-deadline "drop" policy (weighting with lambda=0 would train
+    stragglers at full weight — a different policy than the sync
+    baseline); cadence 0 means "the round period"."""
+    out = []
+    for churn in churn_rates:
+        for lam in staleness_lambdas:
+            for cad in agg_cadences:
+                out.append(dataclasses.replace(
+                    base, churn_rate=churn,
+                    staleness="weighted" if lam > 0 else base.staleness,
+                    staleness_lambda=lam,
+                    agg_cadence_s=cad if cad > 0 else None).resolved())
+    return out
+
+
+def _float_list(text: str) -> Tuple[float, ...]:
+    return tuple(float(x) for x in text.split(","))
 
 
 def main(argv=None) -> int:
@@ -340,15 +408,19 @@ def main(argv=None) -> int:
                     help="worker processes for cell groups (1 = in-process)")
     ap.add_argument("--no-vmap", action="store_true",
                     help="disable the seed-vmapped selection prefix")
-    ap.add_argument("--mesh", default=None, metavar="clients=K",
-                    help="partition every cell's in-round client axis "
-                         "over K devices (CPU: emulated host devices)")
-    ap.add_argument("--fused-probe", action="store_true",
-                    help="fused probe->evaluate fast path + tight probe "
-                         "packing (masks bit-identical; see README)")
-    ap.add_argument("--overlap-rounds", action="store_true",
-                    help="round-ahead scheduler: dispatch round r+1's "
-                         "selection prefix while round r trains")
+    # the shared RunConfig flags (mesh / fused probe / overlap / server /
+    # single-scenario async knobs) — fl/runconfig.py
+    add_run_arguments(ap)
+    # the *plural* scenario-axis flags: each adds a grid dimension
+    ap.add_argument("--churn-rates", type=_float_list, default=None,
+                    help="comma list of coverage-window churn rates "
+                         "(scenario axis; e.g. 0,0.3)")
+    ap.add_argument("--staleness-lambdas", type=_float_list, default=None,
+                    help="comma list of staleness decay lambdas "
+                         "(scenario axis; 0 = hard-deadline drop)")
+    ap.add_argument("--agg-cadences", type=_float_list, default=None,
+                    help="comma list of aggregation cadences in simulated "
+                         "seconds (scenario axis; 0 = the round period)")
     ap.add_argument("--out", default="sweep.csv")
     args = ap.parse_args(argv)
 
@@ -366,8 +438,18 @@ def main(argv=None) -> int:
     classes_list = tuple(int(c) for c in args.classes.split(","))
     distributions = tuple(args.distributions.split(","))
     cfg_fn = paper_cell_config if args.paper_profile else fast_cell_config
-    if args.fused_probe:
-        cfg_fn = _FUSED_CFG[cfg_fn]
+
+    base_run = RunConfig.from_args(args)
+    if (args.churn_rates is None and args.staleness_lambdas is None
+            and args.agg_cadences is None):
+        runs = [base_run]
+    else:
+        runs = scenario_runs(base_run,
+                             args.churn_rates or (base_run.churn_rate,),
+                             args.staleness_lambdas
+                             or (base_run.staleness_lambda,),
+                             args.agg_cadences
+                             or (base_run.agg_cadence_s or 0.0,))
 
     t0 = time.time()
     from repro.launch.mesh import client_mesh_context
@@ -379,15 +461,15 @@ def main(argv=None) -> int:
                      seeds=range(args.seeds), rounds=args.rounds,
                      cfg_fn=cfg_fn, vmap_prefix=not args.no_vmap,
                      workers=args.workers, mesh_spec=args.mesh,
-                     overlap=args.overlap_rounds,
+                     runs=runs,
                      log=lambda s: print(s, flush=True))
     csv_text = rows_to_csv(rows)
     with open(args.out, "w") as f:
         f.write(csv_text)
     print(f"[sweep] wrote {len(rows)} rows "
           f"({len(schemes)}x{len(classes_list)}x{len(distributions)} cells "
-          f"x {args.seeds} seeds x {args.rounds} rounds) to {args.out} "
-          f"in {time.time() - t0:.0f}s")
+          f"x {len(runs)} scenarios x {args.seeds} seeds x {args.rounds} "
+          f"rounds) to {args.out} in {time.time() - t0:.0f}s")
     return 0
 
 

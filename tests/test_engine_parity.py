@@ -17,24 +17,29 @@ from repro.fl.aggregation import fedavg, fedavg_masked
 from repro.fl.mobility import MobilityConfig
 from repro.fl.partition import PartitionConfig
 from repro.fl.rounds import FLSimConfig, FLSimulation
+from repro.fl.runconfig import RunConfig
 
 N_CLIENTS = 10
 N_ROUNDS = 3
 
 
-def _cfg(scheme: str, engine: str, **kw) -> FLSimConfig:
+def _cfg(scheme: str, **kw) -> FLSimConfig:
     kw.setdefault("partition",
                   PartitionConfig(n_clients=N_CLIENTS, big_clients=3,
                                   big_quantity=120, small_quantity=40,
                                   classes_per_client=9))
     kw.setdefault("mobility", MobilityConfig(n_vehicles=N_CLIENTS, seed=0))
     return FLSimConfig(
-        scheme=scheme, engine=engine, n_rounds=N_ROUNDS, local_epochs=1,
+        scheme=scheme, n_rounds=N_ROUNDS, local_epochs=1,
         samples_per_class=260, probe_samples=64, seed=0, **kw)
 
 
+def _sim(scheme: str, engine: str, **kw) -> FLSimulation:
+    return FLSimulation(_cfg(scheme, **kw), run=RunConfig(engine=engine))
+
+
 def _run(scheme: str, engine: str, **kw):
-    sim = FLSimulation(_cfg(scheme, engine, **kw))
+    sim = _sim(scheme, engine, **kw)
     rows, masks = [], []
     for r in range(N_ROUNDS):
         rows.append(sim.run_round(r))
@@ -59,7 +64,7 @@ def test_engine_parity(scheme):
 
 def test_engine_rejects_unknown():
     with pytest.raises(ValueError):
-        FLSimulation(_cfg("dcs", "async"))
+        FLSimulation(_cfg("dcs"), run=RunConfig(engine="other"))
 
 
 def test_dataset_loss_batch_matches_per_client():
@@ -102,7 +107,7 @@ def test_grouped_parity_table3_skew():
                                         classes_per_client=9))
     rows_l, masks_l = _run("dcs", "loop", **kw)
     rows_b, masks_b = _run("dcs", "batched", **kw)
-    sim = FLSimulation(_cfg("dcs", "batched", **kw))
+    sim = _sim("dcs", "batched", **kw)
     assert [g.cap for g in sim.groups] == [200, 60]
     for r in range(N_ROUNDS):
         np.testing.assert_array_equal(masks_l[r], masks_b[r])
@@ -112,7 +117,7 @@ def test_grouped_parity_table3_skew():
 
 def test_uniform_capacity_single_group():
     """uniform_capacity=True reproduces the PR-1 single max-cap stack."""
-    sim = FLSimulation(_cfg("dcs", "batched", uniform_capacity=True))
+    sim = _sim("dcs", "batched", uniform_capacity=True)
     assert len(sim.groups) == 1
     assert sim.groups[0].cap == sim.cap
     assert sim.groups[0].size == N_CLIENTS
@@ -122,8 +127,8 @@ def test_partial_group_cohort_parity():
     """A cohort confined to one capacity group trains identically in both
     engines (the batched engine must skip the other group's empty cohort
     rather than pad from it)."""
-    sim_b = FLSimulation(_cfg("dcs", "batched"))
-    sim_l = FLSimulation(_cfg("dcs", "loop"))
+    sim_b = _sim("dcs", "batched")
+    sim_l = _sim("dcs", "loop")
     survivors = np.zeros(N_CLIENTS, bool)
     survivors[[4, 7]] = True                 # small-capacity clients only
     sim_b._train_batched(survivors, sim_b._round_keys(0))
@@ -142,7 +147,7 @@ def test_partial_group_cohort_parity():
 def test_empty_round_is_noop_broadcast(engine):
     """When every evaluation is below E_tau nobody is selected: the round
     must leave the global model bit-identical in both engines."""
-    sim = FLSimulation(_cfg("dcs", engine, e_tau=1e9))
+    sim = _sim("dcs", engine, e_tau=1e9)
     before = [np.asarray(x).copy() for x in jax.tree.leaves(sim.params)]
     row = sim.run_round(0)
     assert row["n_selected"] == 0
@@ -155,7 +160,7 @@ def test_empty_round_is_noop_broadcast(engine):
 def test_all_stragglers_leave_global_model_untouched():
     """With an unmeetable deadline every selected client straggles: the
     batched engine must aggregate nothing and keep the exact params."""
-    sim = FLSimulation(_cfg("ccs-fuzzy", "batched", deadline_s=1e-9))
+    sim = _sim("ccs-fuzzy", "batched", deadline_s=1e-9)
     before = [np.asarray(x).copy() for x in jax.tree.leaves(sim.params)]
     row = sim.run_round(0)
     assert row["n_selected"] > 0

@@ -31,6 +31,7 @@ from repro.core.rules import build_rule_table
 from repro.fl.mobility import MobilityConfig
 from repro.fl.partition import PartitionConfig
 from repro.fl.rounds import FLSimConfig, FLSimulation
+from repro.fl.runconfig import RunConfig
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.kernels.fuzzy_eval import block_p, fuzzy_eval_pallas
@@ -184,8 +185,8 @@ def test_fused_prefix_masks_bitwise_vs_unfused(scheme):
     """ISSUE 5 acceptance: selection masks BIT-IDENTICAL fused vs
     unfused through ``selection_prefix``, across rounds with real
     training in between (so round 1 probes evolved params)."""
-    ref = FLSimulation(_cfg(scheme))
-    fused = FLSimulation(_cfg(scheme, fused_probe=True))
+    ref = FLSimulation(_cfg(scheme), run=RunConfig(fused_probe=False))
+    fused = FLSimulation(_cfg(scheme))      # fused is the default now
     assert fused.stage_cfg.fused_probe
     # the tight pack must actually be tighter than the aligned pack
     assert (fused.statics.probe_images.shape[0]
@@ -220,6 +221,7 @@ import jax
 from repro.fl.mobility import MobilityConfig
 from repro.fl.partition import PartitionConfig
 from repro.fl.rounds import FLSimConfig, FLSimulation
+from repro.fl.runconfig import RunConfig
 from repro.launch.mesh import make_clients_mesh
 from repro.sharding.api import DEFAULT_RULES, logical_sharding
 
@@ -235,11 +237,12 @@ def cfg(scheme, seed=0, **kw):
         mobility=MobilityConfig(n_vehicles=N, seed=seed), **kw)
 
 def run_case(scheme, k, rounds):
-    plain = FLSimulation(cfg(scheme))                 # unfused, unsharded
-    fused = FLSimulation(cfg(scheme, fused_probe=True))
+    plain = FLSimulation(cfg(scheme),                 # unfused, unsharded
+                         run=RunConfig(fused_probe=False))
+    fused = FLSimulation(cfg(scheme))                 # fused default
     mesh = make_clients_mesh(k)
     with mesh, logical_sharding(mesh, DEFAULT_RULES):
-        sh = FLSimulation(cfg(scheme, fused_probe=True))
+        sh = FLSimulation(cfg(scheme))
         assert sh.client_mesh is not None and sh.n_shards == k
         n_sel = 0
         for r in range(rounds):
@@ -303,16 +306,16 @@ def test_overlap_scheduler_matches_serial():
         rows_s.append(serial.run_round(r))
         masks_s.append(serial.last_mask.copy())
 
-    overlap = FLSimulation(_cfg("dcs", overlap_rounds=True))
-    rows_o = overlap.run(N_ROUNDS)
+    overlap = FLSimulation(_cfg("dcs"))
+    rows_o = overlap.run(N_ROUNDS, overlap=True)
     assert rows_s == rows_o
     np.testing.assert_array_equal(masks_s[-1], overlap.last_mask)
 
 
 def test_overlap_scheduler_matches_serial_fused():
     """Overlap x fused compose: still bit-identical rows."""
-    a = FLSimulation(_cfg("random", fused_probe=True))
-    b = FLSimulation(_cfg("random", fused_probe=True))
+    a = FLSimulation(_cfg("random"))        # fused is the default now
+    b = FLSimulation(_cfg("random"))
     assert a.run(N_ROUNDS, overlap=False) == b.run(N_ROUNDS, overlap=True)
 
 
@@ -327,7 +330,8 @@ def test_sweep_overlap_rows_identical():
                                       distribution=dist, seed=seed)
         return cfg
 
-    a = run_seed_group("dcs", 9, "uniform", [0, 1], 2, cfg_fn=tiny_cfg)
+    a = run_seed_group("dcs", 9, "uniform", [0, 1], 2, cfg_fn=tiny_cfg,
+                       overlap=False)
     b = run_seed_group("dcs", 9, "uniform", [0, 1], 2, cfg_fn=tiny_cfg,
                        overlap=True)
     assert a == b

@@ -45,8 +45,10 @@ def test_csv_schema_golden(sweep_result):
     lines = csv_text.strip().split("\n")
     assert lines[0] == ",".join(CSV_COLUMNS)
     assert lines[0] == (
-        "round,scheme,seed,classes_per_client,distribution,accuracy,"
-        "n_selected,n_aggregated,n_straggler,mean_eval_selected,"
+        "round,scheme,seed,classes_per_client,distribution,"
+        "churn_rate,staleness_lambda,agg_cadence_s,accuracy,"
+        "n_selected,n_aggregated,n_straggler,n_active,stale_frac,"
+        "n_effective,rounds_behind_hist,mean_eval_selected,"
         "state_bytes,upload_bytes,state_time_s,comm_time_s,"
         "accuracy_mean,accuracy_std,n_selected_mean,n_selected_std,"
         "n_straggler_mean,n_straggler_std")
