@@ -28,7 +28,8 @@ from benchmarks.paper_figures import (bench_fig2_overhead,
 from benchmarks.roofline import bench_roofline_table
 from benchmarks.staleness import bench_staleness, bench_staleness_lambda
 from benchmarks.selection_collectives import (bench_prefix_sharding,
-                                              bench_selection_collectives)
+                                              bench_selection_collectives,
+                                              bench_windowed_scaling)
 
 BENCHES = {
     "engine_throughput": bench_engine_throughput,
@@ -46,6 +47,7 @@ BENCHES = {
     "prefix_fusion": bench_prefix_fusion,
     "prefix_sharding": bench_prefix_sharding,
     "selection_collectives": bench_selection_collectives,
+    "windowed_scaling": bench_windowed_scaling,
     "staleness": bench_staleness,
     "staleness_lambda": bench_staleness_lambda,
     "roofline": bench_roofline_table,

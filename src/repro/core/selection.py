@@ -28,6 +28,21 @@ def dcs_select(pos: jax.Array, evals: jax.Array, *, comm_range: float = 200.0,
                                top_m=top_m, e_tau=e_tau, impl=impl)
 
 
+def dcs_select_windowed(pos: jax.Array, evals: jax.Array, *,
+                        comm_range: float = 200.0, top_m: int = 2,
+                        e_tau: float = 30.0, window: int = 64,
+                        impl: Optional[str] = None
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Windowed distributed election: O(N * window) via a position-sorted
+    sweep instead of the O(N^2) pairwise table.  Returns ``(mask (N,)
+    int32, overflow () int32)`` — the mask is bit-identical to
+    ``dcs_select`` whenever ``overflow == 0``; on overflow the caller
+    falls back to the dense election."""
+    return kops.neighbor_elect_windowed(pos, evals, comm_range=comm_range,
+                                        top_m=top_m, e_tau=e_tau,
+                                        window=window, impl=impl)
+
+
 def ccs_fuzzy_select(evals: jax.Array, n_clients: int) -> jax.Array:
     """Server-side top-n on uploaded evaluations -> int32 mask (N,)."""
     n = evals.shape[0]

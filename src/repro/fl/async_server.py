@@ -266,7 +266,7 @@ class EventDrivenServer:
                      state: Dict[str, jax.Array]) -> Dict[str, float]:
         """Complete round ``rnd`` from a selection-prefix output (the
         sweep harness's per-seed entry point)."""
-        host = jax.device_get(state)
+        host = self.sim.resolve_elect_overflow(rnd, jax.device_get(state))
         self._dispatch_training(rnd, host)
         acc, n_test = evaluate_accuracy_async(
             self.sim.params, self.sim.test_images, self.sim.test_labels,
@@ -291,6 +291,7 @@ class EventDrivenServer:
         state = sim.selection_state(0)
         for r in range(n):
             host = jax.device_get(state)     # fence: the cohort gather
+            host = sim.resolve_elect_overflow(r, host)
             self._dispatch_training(r, host)
             acc, n_test = evaluate_accuracy_async(
                 sim.params, sim.test_images, sim.test_labels, batch=256)

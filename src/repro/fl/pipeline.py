@@ -59,7 +59,7 @@ from repro.fl.aggregation import fedavg_masked, fedavg_sums
 from repro.fl.client import (dataset_loss_packed, local_train_batch,
                              local_train_batch_donated)
 from repro.fl.mobility import coverage_active, positions_jax
-from repro.fl.schemes import get_scheme
+from repro.fl.schemes import ShardCtx, get_scheme
 from repro.fl.network import (NetworkConfig, cwnd_loss_fields,
                               pinned_channel_shadow,
                               predicted_throughput_from_fields,
@@ -70,7 +70,7 @@ from repro.fl.timing import (TimingConfig, completes_before_deadline,
                              training_time_s)
 from repro.kernels import ops as kops
 from repro.sharding.api import (CLIENT_AXIS, current_mesh, mesh_axis_size,
-                                resolve_pspec)
+                                mesh_is_multihost, resolve_pspec)
 
 Params = Any
 
@@ -137,6 +137,18 @@ class StageConfig:
     # the exact churn-free graph — the gating is a static branch, so the
     # event server's sync-parity pin rests on an identical executable.
     churn_rate: float = 0.0
+    # DCS election seam (ISSUE 9): "gather" keeps the dense O(N^2)
+    # election (on all_gather'ed (N,) vectors in the sharded prefix);
+    # "windowed" runs the O(N/K * W) position-sorted window — the
+    # single-device sorted sweep, or the segment-bucketed ppermute halo
+    # ring inside the shard_map.  Windowed rounds carry a runtime
+    # ``elect_overflow`` flag; non-zero means a fixed window/buffer could
+    # not hold every dense comparison and the round driver re-runs that
+    # round with elect="gather" — so windowed masks are bit-identical to
+    # the gather election whenever they are consumed.
+    elect: str = "gather"
+    elect_window: int = 0         # sorted neighbours per side (0 = auto)
+    elect_capacity: int = 0       # shard->segment bucket slots (0 = auto)
 
 
 @functools.lru_cache(maxsize=None)
@@ -252,7 +264,15 @@ def _prefix(st: RoundStatics, params: Params, rnd: jax.Array,
         active = coverage_active(pos, road_length_m=cfg.road_length_m,
                                  churn_rate=cfg.churn_rate)
         evals = jnp.where(active, evals, 0.0)
-    mask = select(cfg, pos, evals, k_sel)
+    scheme = get_scheme(cfg.scheme)
+    windowed = None
+    if cfg.elect == "windowed" and scheme.select_windowed is not None:
+        windowed = scheme.select_windowed(cfg, pos, evals, k_sel)
+    if windowed is not None:
+        mask, elect_overflow = windowed
+    else:
+        mask = select(cfg, pos, evals, k_sel)
+        elect_overflow = jnp.int32(0)
     if cfg.churn_rate > 0.0:
         mask = jnp.where(active, mask, 0)
     survivors, n_straggler = deadline_filter(st, cfg, pos, mask, k_upload)
@@ -278,7 +298,8 @@ def _prefix(st: RoundStatics, params: Params, rnd: jax.Array,
             "n_active": n_active,
             "n_selected": stats["n_selected"],
             "n_survivor": survivors.sum(),
-            "mean_eval_selected": stats["mean_eval_selected"]}
+            "mean_eval_selected": stats["mean_eval_selected"],
+            "elect_overflow": elect_overflow}
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -521,16 +542,43 @@ def _sharded_prefix_fn(cfg: StageConfig, mesh: Mesh, seeds: bool):
                                      churn_rate=cfg.churn_rate)
             evals = jnp.where(active, evals, 0.0)
 
-        # stage: selection on gathered (N,) scalars — the DCS election
-        # window / CCS quota are the prefix's only all-to-all state
-        ev_g = jax.lax.all_gather(evals, CLIENT_AXIS, tiled=True)[:n]
-        pos_g = jax.lax.all_gather(pos, CLIENT_AXIS, tiled=True)[:n]
-        mask_g = select(cfg, pos_g, ev_g, k_sel)
-        if cfg.churn_rate > 0.0:
-            act_g = jax.lax.all_gather(active, CLIENT_AXIS, tiled=True)[:n]
-            mask_g = jnp.where(act_g, mask_g, 0)
-        mask = jax.lax.dynamic_slice_in_dim(jnp.pad(mask_g, (0, pad)),
-                                            i * shard_n, shard_n)
+        # stage: selection.  elect="windowed" keeps the election
+        # shard-local — segment re-bucketing + a ppermute halo ring for
+        # the DCS window, a hierarchical top-k for the CCS quota, and
+        # psum'd stats — so no (N,) vector is ever gathered.  The gather
+        # seam below remains the fallback (and the bit-identity anchor:
+        # a non-zero overflow flag makes the round driver re-run the
+        # round through it).
+        scheme = get_scheme(cfg.scheme)
+        windowed = None
+        if cfg.elect == "windowed" and scheme.select_sharded is not None:
+            ctx = ShardCtx(axis=CLIENT_AXIS, n=n, n_shards=k,
+                           shard_n=shard_n, pad=pad, gid=gid, valid=valid)
+            windowed = scheme.select_sharded(cfg, ctx, pos, evals, k_sel)
+        if windowed is not None:
+            mask, ovf_local = windowed
+            mask = jnp.where(valid, mask, 0)
+            if cfg.churn_rate > 0.0:
+                mask = jnp.where(active, mask, 0)
+            elect_overflow = jax.lax.pmax(ovf_local, CLIENT_AXIS)
+            n_sel = jax.lax.psum(mask.sum(), CLIENT_AXIS)
+            ev_sel = jax.lax.psum((evals * mask).sum(), CLIENT_AXIS)
+            mean_ev_sel = jnp.where(n_sel > 0,
+                                    ev_sel / jnp.maximum(n_sel, 1), 0.0)
+        else:
+            ev_g = jax.lax.all_gather(evals, CLIENT_AXIS, tiled=True)[:n]
+            pos_g = jax.lax.all_gather(pos, CLIENT_AXIS, tiled=True)[:n]
+            mask_g = select(cfg, pos_g, ev_g, k_sel)
+            if cfg.churn_rate > 0.0:
+                act_g = jax.lax.all_gather(active, CLIENT_AXIS,
+                                           tiled=True)[:n]
+                mask_g = jnp.where(act_g, mask_g, 0)
+            mask = jax.lax.dynamic_slice_in_dim(jnp.pad(mask_g, (0, pad)),
+                                                i * shard_n, shard_n)
+            elect_overflow = jnp.int32(0)
+            stats = selection_stats(mask_g, ev_g)
+            n_sel = stats["n_selected"]
+            mean_ev_sel = stats["mean_eval_selected"]
 
         # stage: Eq. 6 deadline, shard-local again
         train_t = training_time_s(cfg.timing, slowdown, n_valid)
@@ -555,11 +603,9 @@ def _sharded_prefix_fn(cfg: StageConfig, mesh: Mesh, seeds: bool):
         else:
             alive_done = jnp.ones_like(survivors)
             n_active = jnp.asarray(n, jnp.int32)
-        stats = selection_stats(mask_g, ev_g)
         return (pos, feats, evals, mask, survivors, n_straggler,
                 t_done, alive_done, n_active,
-                stats["n_selected"], n_survivor,
-                stats["mean_eval_selected"])
+                n_sel, n_survivor, mean_ev_sel, elect_overflow)
 
     def s(*tail):
         """Spec helper: prepend the (unsharded) seed axis when vmapped."""
@@ -578,7 +624,7 @@ def _sharded_prefix_fn(cfg: StageConfig, mesh: Mesh, seeds: bool):
     out_specs = (s(CLIENT_AXIS), s(CLIENT_AXIS, None), s(CLIENT_AXIS),
                  s(CLIENT_AXIS), s(CLIENT_AXIS), rep,
                  s(CLIENT_AXIS), s(CLIENT_AXIS), rep,
-                 rep, rep, rep)
+                 rep, rep, rep, rep)
     body = core if not seeds else jax.vmap(
         core, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0,
                        None, 0, None, 0, 0))
@@ -629,15 +675,23 @@ def _sharded_prefix_fn(cfg: StageConfig, mesh: Mesh, seeds: bool):
             params, t_s, k_sel, pin_shadow,
             padc(loss_u, axis=loss_u.ndim - 1), padc(up_shadow))
         (pos, feats, evals, mask, survivors, n_strag, t_done, alive,
-         n_active, n_sel, n_surv, mev) = out
+         n_active, n_sel, n_surv, mev, ovf) = out
         cut = (lambda x: x[:, :n]) if seeds else (lambda x: x[:n])
-        return {"pos": cut(pos), "feats": cut(feats), "evals": cut(evals),
-                "mask": cut(mask), "survivors": cut(survivors),
-                "n_straggler": n_strag, "t_done": cut(t_done),
-                "alive_at_done": cut(alive), "n_active": n_active,
-                "n_selected": n_sel, "n_survivor": n_surv,
-                "mean_eval_selected": mev}
+        res = {"pos": cut(pos), "feats": cut(feats), "evals": cut(evals),
+               "mask": cut(mask), "survivors": cut(survivors),
+               "n_straggler": n_strag, "t_done": cut(t_done),
+               "alive_at_done": cut(alive), "n_active": n_active,
+               "n_selected": n_sel, "n_survivor": n_surv,
+               "mean_eval_selected": mev, "elect_overflow": ovf}
+        if multihost:
+            # every process consumes the full round state (masks feed the
+            # host-side cohort gather on each host) — replicate outputs
+            # so device_get works everywhere
+            res = {key: jax.lax.with_sharding_constraint(
+                v, NamedSharding(mesh, P())) for key, v in res.items()}
+        return res
 
+    multihost = mesh_is_multihost(mesh)
     return jax.jit(run)
 
 

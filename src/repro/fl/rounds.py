@@ -81,11 +81,13 @@ from repro.fl.client import (evaluate_accuracy_async, local_train,
                              local_train_batch_donated)
 from repro.fl.mobility import FreewayMobility, MobilityConfig
 from repro.fl.network import NetworkConfig
-from repro.fl.partition import (PartitionConfig, partition, stack_clients,
+from repro.fl.partition import (PartitionConfig, partition,
+                                shard_client_range, stack_clients,
                                 steps_per_epoch)
 from repro.fl.runconfig import ENGINES, RunConfig, resolve_run
 from repro.fl.schemes import get_scheme
 from repro.models.cnn import init_cnn
+from repro.sharding.api import CLIENT_AXIS, mesh_is_multihost
 
 
 @dataclass
@@ -143,6 +145,16 @@ class FLSimulation:
         # construction so the probe packs one sample region per shard
         self.client_mesh = pipeline.active_client_mesh()
         self.n_shards = pipeline.mesh_client_shards(self.client_mesh)
+        # a mesh spanning several jax processes (launch --multihost, or a
+        # real multi-host TPU slice): every process runs this same driver
+        # SPMD; per-client statics materialize addressable shards only,
+        # host-consumed arrays (params, round state) stay replicated
+        self.multihost = mesh_is_multihost(self.client_mesh)
+        if self.multihost and self.run_cfg.engine != "batched":
+            raise ValueError("multi-host meshes require engine='batched'")
+        if self.multihost and self.run_cfg.server == "event":
+            raise ValueError("the event-driven server does not support "
+                             "multi-host meshes yet")
         rng = np.random.default_rng(cfg.seed)
         images, labels = make_dataset(cfg.samples_per_class, seed=cfg.seed)
         (tr_i, tr_l), (te_i, te_l) = train_test_split(images, labels,
@@ -194,6 +206,14 @@ class FLSimulation:
         # seed still sees its own channel realizations.
         self.net_key = jax.random.fold_in(
             jax.random.PRNGKey(cfg.network.seed + 53), cfg.seed)
+        if self.multihost:
+            # host-numpy leaves: every process feeds the multi-process
+            # jits identical replicated inputs (committed single-device
+            # arrays would not be globally addressable)
+            self.params = jax.device_get(self.params)
+            self.key = np.asarray(self.key)
+            self.train_key = np.asarray(self.train_key)
+            self.net_key = np.asarray(self.net_key)
         self.last_mask: Optional[np.ndarray] = None        # set per round
         self.statics = self._build_statics()
         self.stage_cfg = self._build_stage_cfg()
@@ -204,6 +224,24 @@ class FLSimulation:
         lifetime (the partition, placement and hardware mix are static)."""
         f32 = jnp.float32
         ecfg = self.evaluator.cfg
+        if self.multihost:
+            # replicated host-numpy leaves (tiny (N,) vectors) except the
+            # probe tensors, which _build_packed_probe materialized as
+            # global client-sharded arrays with addressable shards only
+            f32 = np.float32
+            return pipeline.RoundStatics(
+                x0=np.asarray(self.mobility.x0, f32),
+                speeds=np.asarray(self.mobility.speeds, f32),
+                jitter_phase=np.asarray(self.mobility._jitter_phase, f32),
+                slowdown=np.asarray(self.slowdown, f32),
+                n_valid=np.asarray(self.n_valid, f32),
+                probe_images=self._probe_images,
+                probe_labels=self._probe_labels,
+                probe_seg=self._probe_seg,
+                probe_counts=np.asarray(self._probe_counts),
+                means=np.asarray(ecfg.means, f32),
+                sigmas=np.asarray(ecfg.sigmas, f32),
+                level_centers=np.asarray(self.evaluator.level_centers, f32))
         return pipeline.RoundStatics(
             x0=jnp.asarray(self.mobility.x0, f32),
             speeds=jnp.asarray(self.mobility.speeds, f32),
@@ -259,16 +297,25 @@ class FLSimulation:
         take = np.minimum(self.n_valid, probe).astype(np.int64)
         batch = self._PROBE_BATCH
         align = 1 if self.run_cfg.fused_probe else batch
-        shard_clients = pipeline.pad_to_shards(self.n,
-                                               self.n_shards) // self.n_shards
         im_shape = self.groups[0].images.shape[2:]
         im_dtype = self.groups[0].images.dtype
         lb_dtype = self.groups[0].labels.dtype
-        regions = []
-        for d in range(self.n_shards):
+
+        def shard_range(d):
+            return shard_client_range(self.n, self.n_shards, d)
+
+        # the common region length is agreed from counts alone — every
+        # process computes it for ALL shards without touching sample data
+        aligned = take + (-take) % align
+        length = max(batch, max(
+            int(sum(aligned[i] for i in shard_range(d)) or 0)
+            for d in range(self.n_shards)))
+
+        def build_region(d):
+            """Shard ``d``'s probe region, padded to ``length`` with
+            sentinel rows (seg == n: the overflow loss lane)."""
             ims, lbs, segs = [], [], []
-            for i in range(d * shard_clients,
-                           min((d + 1) * shard_clients, self.n)):
+            for i in shard_range(d):
                 gi, li = self._slot[i]
                 g = self.groups[gi]
                 t = int(take[i])
@@ -280,22 +327,55 @@ class FLSimulation:
                     ims.append(np.zeros((pad,) + im_shape, im_dtype))
                     lbs.append(np.zeros(pad, lb_dtype))
                     segs.append(np.full(pad, self.n))
-            regions.append(
-                (np.concatenate(ims) if ims
-                 else np.zeros((0,) + im_shape, im_dtype),
-                 np.concatenate(lbs) if lbs else np.zeros(0, lb_dtype),
-                 np.concatenate(segs) if segs else np.zeros(0, np.int64)))
-        length = max(batch, max(r[0].shape[0] for r in regions))
-        flat_im, flat_lb, seg = [], [], []
-        for im, lb, sg in regions:           # equalize region lengths
-            pad = length - im.shape[0]
-            flat_im += [im, np.zeros((pad,) + im_shape, im_dtype)]
-            flat_lb += [lb, np.zeros(pad, lb_dtype)]
-            seg += [sg, np.full(pad, self.n)]
-        self._probe_images = jnp.asarray(np.concatenate(flat_im))
-        self._probe_labels = jnp.asarray(np.concatenate(flat_lb))
-        self._probe_seg = jnp.asarray(np.concatenate(seg).astype(np.int32))
-        self._probe_counts = jnp.asarray(take.astype(np.int32))
+            used = int(sum(aligned[i] for i in shard_range(d)) or 0)
+            pad = length - used
+            ims.append(np.zeros((pad,) + im_shape, im_dtype))
+            lbs.append(np.zeros(pad, lb_dtype))
+            segs.append(np.full(pad, self.n))
+            return (np.concatenate(ims), np.concatenate(lbs),
+                    np.concatenate(segs).astype(np.int32))
+
+        if not self.multihost:
+            regions = [build_region(d) for d in range(self.n_shards)]
+            self._probe_images = jnp.asarray(
+                np.concatenate([r[0] for r in regions]))
+            self._probe_labels = jnp.asarray(
+                np.concatenate([r[1] for r in regions]))
+            self._probe_seg = jnp.asarray(
+                np.concatenate([r[2] for r in regions]))
+        else:
+            # per-host loading: each process builds ONLY the regions its
+            # devices own and assembles global client-sharded arrays —
+            # the (S, 28, 28, 1) probe stack never fully materializes on
+            # any single host
+            from jax.sharding import NamedSharding, PartitionSpec
+            mesh = self.client_mesh
+            cache: Dict[int, tuple] = {}
+
+            def region(d):
+                if d not in cache:
+                    cache[d] = build_region(d)
+                return cache[d]
+
+            def globalize(col, extra_dims, dtype):
+                shape = (self.n_shards * length,) + extra_dims
+                sh = NamedSharding(
+                    mesh, PartitionSpec(CLIENT_AXIS,
+                                        *([None] * len(extra_dims))))
+
+                def cb(index):
+                    start = index[0].start or 0
+                    return np.asarray(region(start // length)[col],
+                                      dtype=dtype)
+
+                return jax.make_array_from_callback(shape, sh, cb)
+
+            self._probe_images = globalize(0, im_shape, im_dtype)
+            self._probe_labels = globalize(1, (), lb_dtype)
+            self._probe_seg = globalize(2, (), np.int32)
+            cache.clear()
+        self._probe_counts = jnp.asarray(take.astype(np.int32)) \
+            if not self.multihost else take.astype(np.int32)
 
     def _round_keys(self, rnd: int) -> jax.Array:
         """Per-(round, client) PRNG keys — engine-independent, so the loop
@@ -304,10 +384,15 @@ class FLSimulation:
         return jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
             rk, jnp.arange(self.n))
 
-    def selection_state(self, rnd: int) -> Dict[str, jax.Array]:
+    def selection_state(self, rnd: int, *,
+                        elect: Optional[str] = None) -> Dict[str, jax.Array]:
         """Run the staged selection prefix (probe -> evaluate -> select ->
         deadline) for round ``rnd`` as one jitted call.  Deterministic in
         ``(params, rnd)``: the same round can be queried repeatedly.
+
+        ``elect`` overrides the stage config's election seam for this
+        call — the overflow fallback re-runs a round with
+        ``elect="gather"`` (see ``resolve_elect_overflow``).
 
         The evaluator's membership parameters are re-read every call, so
         a post-construction ``FuzzyEvaluator.calibrate()`` takes effect
@@ -315,17 +400,34 @@ class FLSimulation:
         sweep's vmapped path stacks statics once up front and therefore
         pins calibration at stacking time.)"""
         ecfg = self.evaluator.cfg
+        arr = np.asarray if self.multihost \
+            else (lambda a, d: jnp.asarray(a, d))
         st = dataclasses.replace(
             self.statics,
-            means=jnp.asarray(ecfg.means, jnp.float32),
-            sigmas=jnp.asarray(ecfg.sigmas, jnp.float32))
+            means=arr(ecfg.means, np.float32),
+            sigmas=arr(ecfg.sigmas, np.float32))
+        cfg = self.stage_cfg
+        if elect is not None and elect != cfg.elect:
+            cfg = dataclasses.replace(cfg, elect=elect)
+        rnd_in = np.int32(rnd) if self.multihost else jnp.int32(rnd)
         if self.client_mesh is not None:
             return pipeline.selection_prefix_sharded(
-                st, self.params, jnp.int32(rnd), self.key,
-                self.net_key, cfg=self.stage_cfg, mesh=self.client_mesh)
+                st, self.params, rnd_in, self.key,
+                self.net_key, cfg=cfg, mesh=self.client_mesh)
         return pipeline.selection_prefix(
-            st, self.params, jnp.int32(rnd), self.key,
-            self.net_key, cfg=self.stage_cfg)
+            st, self.params, rnd_in, self.key,
+            self.net_key, cfg=cfg)
+
+    def resolve_elect_overflow(self, rnd: int, host: Dict) -> Dict:
+        """The windowed election's parity escape hatch: when round
+        ``rnd``'s prefix raised ``elect_overflow`` (a fixed window/halo
+        buffer could not hold every dense comparison), re-run the prefix
+        with the gather election and use that state instead.  The prefix
+        is pure in ``(params, rnd)``, so the re-run sees identical
+        inputs — the returned masks are exactly the dense election's."""
+        if int(np.max(host.get("elect_overflow", 0))) == 0:
+            return host
+        return jax.device_get(self.selection_state(rnd, elect="gather"))
 
     def _comm_accounting(self, n_selected: int) -> Dict[str, float]:
         """Per-round communication (bytes and time) per §4.2 / Fig. 9,
@@ -465,11 +567,20 @@ class FLSimulation:
         may come from a seed-vmapped sweep dispatch).  This is the single
         device->host crossing of the round — the survivor mask becomes
         concrete here, at the cohort gather."""
-        host = jax.device_get(state)
+        host = self.resolve_elect_overflow(rnd, jax.device_get(state))
         self._dispatch_training(rnd, host)
         acc, n_test = evaluate_accuracy_async(
-            self.params, self.test_images, self.test_labels, batch=256)
+            self._eval_params(), self.test_images, self.test_labels,
+            batch=256)
         return self._round_row(rnd, host, acc, n_test)
+
+    def _eval_params(self):
+        """Params as the accuracy evaluation consumes them: under a
+        multi-host mesh the global (replicated) device arrays come back
+        to the host first, so the local eval jit sees process-local
+        inputs; otherwise the device params pass straight through."""
+        return jax.device_get(self.params) if self.multihost \
+            else self.params
 
     def _dispatch_training(self, rnd: int, host: Dict) -> None:
         """Steps 5 + 7 from a host-side prefix state: cohort gather and
@@ -545,9 +656,11 @@ class FLSimulation:
         state = self.selection_state(0)
         for r in range(n_rounds):
             host = jax.device_get(state)     # fence: the cohort gather
+            host = self.resolve_elect_overflow(r, host)
             self._dispatch_training(r, host)
             acc, n_test = evaluate_accuracy_async(
-                self.params, self.test_images, self.test_labels, batch=256)
+                self._eval_params(), self.test_images, self.test_labels,
+                batch=256)
             if r + 1 < n_rounds:             # round-ahead: r+1's prefix
                 state = self.selection_state(r + 1)
             rows.append(self._round_row(r, host, acc, n_test))

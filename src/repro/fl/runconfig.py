@@ -31,6 +31,13 @@ from typing import Optional
 ENGINES = ("batched", "loop")
 SERVERS = ("sync", "event")
 STALENESS_MODES = ("drop", "weighted")
+ELECT_MODES = ("auto", "gather", "windowed")
+
+# fleets at or above this size default to the windowed O(N/K * W)
+# election under elect="auto"; smaller fleets keep the dense gather
+# seam (the window covers most of the fleet anyway, so there is
+# nothing to win)
+AUTO_WINDOWED_MIN_CLIENTS = 512
 
 # FLSimConfig fields that moved here; ``resolve_run`` folds non-None
 # values into the RunConfig behind a DeprecationWarning
@@ -61,6 +68,12 @@ class RunConfig:
     staleness: str = "drop"              # drop | weighted
     staleness_lambda: float = 0.0        # weighted: 1/(1 + lambda * delay)
     agg_cadence_s: Optional[float] = None  # None = round period (deadline_s)
+    # DCS election seam: auto (windowed for large fleets), gather (the
+    # dense O(N^2) election on gathered (N,) vectors), windowed (the
+    # O(N/K * W) position-sorted window; overflow rounds re-run through
+    # gather, so masks stay bit-identical either way)
+    elect: str = "auto"
+    elect_window: int = 0                # sorted window per side (0 = auto)
 
     def resolved(self) -> "RunConfig":
         """Validate and normalize: any async knob promotes ``server`` to
@@ -83,6 +96,12 @@ class RunConfig:
         if self.agg_cadence_s is not None and self.agg_cadence_s <= 0.0:
             raise ValueError(f"agg_cadence_s must be > 0: "
                              f"{self.agg_cadence_s}")
+        if self.elect not in ELECT_MODES:
+            raise ValueError(f"elect must be one of {ELECT_MODES}: "
+                             f"{self.elect!r}")
+        if self.elect_window < 0:
+            raise ValueError(f"elect_window must be >= 0: "
+                             f"{self.elect_window}")
         server = self.server
         if (self.churn_rate > 0.0 or self.staleness == "weighted"
                 or self.agg_cadence_s is not None):
@@ -101,6 +120,10 @@ class RunConfig:
         plus this run's device-level knobs (fused probe, churn)."""
         from repro.fl.pipeline import StageConfig
         from repro.fl.timing import TimingConfig
+        elect = self.elect
+        if elect == "auto":
+            elect = ("windowed" if n_clients >= AUTO_WINDOWED_MIN_CLIENTS
+                     else "gather")
         return StageConfig(
             scheme=cfg.scheme, n_clients=n_clients,
             comm_range_m=cfg.comm_range_m, top_m=cfg.top_m,
@@ -112,7 +135,8 @@ class RunConfig:
                                 deadline_s=cfg.deadline_s),
             network=cfg.network, probe_batch=probe_batch,
             fused_probe=self.fused_probe,
-            churn_rate=self.churn_rate)
+            churn_rate=self.churn_rate,
+            elect=elect, elect_window=self.elect_window)
 
     @classmethod
     def from_args(cls, args, base: Optional["RunConfig"] = None
@@ -136,7 +160,9 @@ class RunConfig:
                             ("staleness", "staleness"),
                             ("churn_rate", "churn_rate"),
                             ("staleness_lambda", "staleness_lambda"),
-                            ("agg_cadence", "agg_cadence_s")):
+                            ("agg_cadence", "agg_cadence_s"),
+                            ("elect", "elect"),
+                            ("elect_window", "elect_window")):
             v = getattr(args, attr, None)
             if v is not None:
                 kw[field] = v
@@ -177,6 +203,14 @@ def add_run_arguments(ap) -> None:
     ap.add_argument("--agg-cadence", type=float, default=None,
                     help="aggregation cadence T_agg in simulated seconds "
                          "(0 = the round period; implies --server event)")
+    ap.add_argument("--elect", choices=ELECT_MODES, default=None,
+                    help="DCS election seam: auto (windowed for large "
+                         "fleets), gather (dense O(N^2) on gathered "
+                         "vectors), windowed (O(N/K*W) sorted window; "
+                         "bit-identical masks via overflow fallback)")
+    ap.add_argument("--elect-window", type=int, default=None,
+                    help="windowed election: sorted neighbours per side "
+                         "(0 = auto-size from fleet density)")
 
 
 def resolve_run(sim_cfg, run: Optional[RunConfig] = None) -> RunConfig:

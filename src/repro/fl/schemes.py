@@ -16,19 +16,58 @@ int32 mask``.  ``overhead_key`` picks the ``core/overhead.py``
 accumulated-time model: ``"cfl"`` maintains classical full client state
 (the random baseline), ``"ccs-fuzzy"`` exchanges evaluations via the
 cloud, ``"dcs"`` exchanges evaluations over DSRC.
+
+Two optional fast paths back the windowed election (ISSUE 9):
+
+- ``select_windowed(cfg, pos, evals, key) -> (mask, overflow) | None``
+  replaces the O(N^2) sweep on a single device with an O(N * W)
+  position-sorted window; returning ``None`` (at trace time) means "no
+  windowed form, use ``select``".
+- ``select_sharded(cfg, ctx, pos, evals, key) -> (mask, overflow) |
+  None`` runs *inside* the client-sharded ``shard_map`` on per-shard
+  arrays and must return the local shard's mask without ever
+  materialising the gathered (N,) vectors.  ``ctx`` is a ``ShardCtx``.
+  Returning ``None`` means the configuration is infeasible for this
+  scheme (e.g. the DCS halo ring needs ``2*hops + 1 <= K``) and the
+  prefix falls back to the gather seam.
+
+Both paths carry a runtime ``overflow`` int32: non-zero signals a fixed
+window/buffer could not hold every comparison the dense election would
+make, and the round driver re-runs that round through the gather path —
+so windowed masks are bit-identical to the full election whenever used.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 
+from repro.core import elect as celect
 from repro.core.selection import (ccs_fuzzy_select, ccs_random_select,
-                                  dcs_select)
+                                  dcs_select, dcs_select_windowed)
 
 # (cfg, pos, evals, sel_key) -> int32 mask (N,)
 SelectFn = Callable[[Any, jax.Array, jax.Array, jax.Array], jax.Array]
+# (cfg, pos, evals, sel_key) -> (mask, overflow) or None
+WindowedFn = Callable[..., Optional[Tuple[jax.Array, jax.Array]]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Per-shard context handed to ``select_sharded`` inside shard_map.
+
+    ``gid``/``valid`` are the shard's (shard_n,) global client ids and
+    real-client mask (padding slots are invalid); ``pad`` is the global
+    padding ``n_shards * shard_n - n``."""
+    axis: str
+    n: int
+    n_shards: int
+    shard_n: int
+    pad: int
+    gid: jax.Array
+    valid: jax.Array
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +76,8 @@ class Scheme:
     name: str
     select: SelectFn
     overhead_key: str             # core/overhead.py accumulated-time key
+    select_windowed: Optional[WindowedFn] = None
+    select_sharded: Optional[WindowedFn] = None
 
 
 _REGISTRY: Dict[str, Scheme] = {}
@@ -44,7 +85,9 @@ _REGISTRY: Dict[str, Scheme] = {}
 
 def register_scheme(name: str, fn: SelectFn, *,
                     overhead_key: str = "ccs-fuzzy",
-                    overwrite: bool = False) -> Scheme:
+                    overwrite: bool = False,
+                    select_windowed: Optional[WindowedFn] = None,
+                    select_sharded: Optional[WindowedFn] = None) -> Scheme:
     """Register ``fn`` as selection scheme ``name``.
 
     Re-registering an existing name raises unless ``overwrite=True`` —
@@ -55,7 +98,9 @@ def register_scheme(name: str, fn: SelectFn, *,
     if name in _REGISTRY and not overwrite:
         raise ValueError(f"scheme {name!r} is already registered "
                          f"(pass overwrite=True to replace)")
-    scheme = Scheme(name=name, select=fn, overhead_key=overhead_key)
+    scheme = Scheme(name=name, select=fn, overhead_key=overhead_key,
+                    select_windowed=select_windowed,
+                    select_sharded=select_sharded)
     _REGISTRY[name] = scheme
     return scheme
 
@@ -75,6 +120,17 @@ def scheme_names() -> Tuple[str, ...]:
     return tuple(_REGISTRY)
 
 
+def elect_window(cfg) -> int:
+    """The config's sorted-neighbour window (0 = auto-sized)."""
+    return cfg.elect_window or celect.auto_window(
+        cfg.n_clients, cfg.comm_range_m, cfg.road_length_m)
+
+
+def elect_capacity(cfg, shard_n: int, n_shards: int) -> int:
+    """The config's per-(shard -> segment) bucket capacity (0 = auto)."""
+    return cfg.elect_capacity or celect.auto_capacity(shard_n, n_shards)
+
+
 # -- the paper's three schemes ----------------------------------------------
 
 def _dcs(cfg, pos, evals, sel_key):
@@ -82,14 +138,60 @@ def _dcs(cfg, pos, evals, sel_key):
                       top_m=cfg.top_m, e_tau=cfg.e_tau)
 
 
+def _dcs_windowed(cfg, pos, evals, sel_key):
+    return dcs_select_windowed(pos, evals, comm_range=cfg.comm_range_m,
+                               top_m=cfg.top_m, e_tau=cfg.e_tau,
+                               window=elect_window(cfg))
+
+
+def _dcs_sharded(cfg, ctx, pos, evals, sel_key):
+    k = ctx.n_shards
+    if k < 2:
+        return None
+    hops = celect.ring_hops(cfg.comm_range_m, cfg.road_length_m, k)
+    if 2 * hops + 1 > k:
+        return None                # halo ring would lap itself -> gather
+    return celect.ring_halo_elect(
+        pos, evals, ctx.gid, ctx.valid, axis=ctx.axis, n=ctx.n,
+        n_shards=k, shard_n=ctx.shard_n, comm_range=cfg.comm_range_m,
+        top_m=cfg.top_m, e_tau=cfg.e_tau, road_length=cfg.road_length_m,
+        window=elect_window(cfg),
+        capacity=elect_capacity(cfg, ctx.shard_n, k))
+
+
 def _ccs_fuzzy(cfg, pos, evals, sel_key):
     return ccs_fuzzy_select(evals, cfg.n_clients_central)
+
+
+def _ccs_fuzzy_sharded(cfg, ctx, pos, evals, sel_key):
+    if ctx.n_shards < 2:
+        return None
+    mask = celect.sharded_topk_mask(
+        evals, ctx.gid, ctx.valid, axis=ctx.axis, n=ctx.n,
+        shard_n=ctx.shard_n, k_top=min(cfg.n_clients_central, ctx.n))
+    return mask, jnp.int32(0)
 
 
 def _ccs_random(cfg, pos, evals, sel_key):
     return ccs_random_select(sel_key, cfg.n_clients, cfg.n_clients_central)
 
 
-register_scheme("dcs", _dcs, overhead_key="dcs")
-register_scheme("ccs-fuzzy", _ccs_fuzzy, overhead_key="ccs-fuzzy")
-register_scheme("random", _ccs_random, overhead_key="cfl")
+def _ccs_random_sharded(cfg, ctx, pos, evals, sel_key):
+    # the draw only needs the key: compute the full mask replicated (it
+    # is O(N) bits of identical work per device, no collectives) and
+    # slice out this shard
+    full = ccs_random_select(sel_key, cfg.n_clients, cfg.n_clients_central)
+    padded = jnp.pad(full, (0, ctx.pad))
+    i = jax.lax.axis_index(ctx.axis)
+    mask = jax.lax.dynamic_slice_in_dim(padded, i * ctx.shard_n,
+                                        ctx.shard_n)
+    return mask, jnp.int32(0)
+
+
+register_scheme("dcs", _dcs, overhead_key="dcs",
+                select_windowed=_dcs_windowed,
+                select_sharded=_dcs_sharded)
+register_scheme("ccs-fuzzy", _ccs_fuzzy, overhead_key="ccs-fuzzy",
+                select_sharded=_ccs_fuzzy_sharded)
+register_scheme("random", _ccs_random, overhead_key="cfl",
+                select_sharded=_ccs_random_sharded)

@@ -21,6 +21,20 @@ BLOCK_I = 256
 BLOCK_J = 1024
 
 
+def _pick_blocks(n: int) -> Tuple[int, int, int]:
+    """Adaptive (block_i, block_j, padded_n) for the dense O(N^2) sweep.
+
+    Small fleets shrink both tiles to the 128-lane floor instead of
+    padding to the full 256/1024 defaults (a 96-vehicle fleet pays one
+    128x128 tile, not 256x256); large fleets keep the wide 1024-lane
+    candidate tile whenever the padded size divides it."""
+    m128 = max(128, -(-n // 128) * 128)
+    bi = min(BLOCK_I, m128)
+    np_ = -(-n // bi) * bi
+    bj = BLOCK_J if np_ % BLOCK_J == 0 else bi
+    return bi, bj, np_
+
+
 def _kernel(pos_i_ref, ev_i_ref, idx_i_ref, pos_j_ref, ev_j_ref, idx_j_ref,
             out_ref, count_ref, *, comm_range: float, top_m: int,
             e_tau: float, n_valid: int):
@@ -54,10 +68,7 @@ def neighbor_elect_pallas(pos: jax.Array, evals: jax.Array, *,
                           interpret: bool = True) -> jax.Array:
     """pos, evals: (N,) -> selected (N,) int32 (1 = becomes a client)."""
     n = pos.shape[0]
-    pad = (-n) % BLOCK_I
-    bj = BLOCK_J if (n + pad) % BLOCK_J == 0 else BLOCK_I
-    padj = (-(n + pad)) % bj
-    np_ = n + pad + padj
+    bi, bj, np_ = _pick_blocks(n)
     # pad with sentinels far away / below threshold
     posp = jnp.pad(pos.astype(jnp.float32), (0, np_ - n),
                    constant_values=1e18)
@@ -68,19 +79,91 @@ def neighbor_elect_pallas(pos: jax.Array, evals: jax.Array, *,
     out = pl.pallas_call(
         functools.partial(_kernel, comm_range=float(comm_range),
                           top_m=int(top_m), e_tau=float(e_tau), n_valid=n),
-        grid=(np_ // BLOCK_I, np_ // bj),
+        grid=(np_ // bi, np_ // bj),
         in_specs=[
-            pl.BlockSpec((1, BLOCK_I), lambda i, j: (0, i)),   # pos_i
-            pl.BlockSpec((1, BLOCK_I), lambda i, j: (0, i)),   # ev_i
-            pl.BlockSpec((1, BLOCK_I), lambda i, j: (0, i)),   # idx_i
+            pl.BlockSpec((1, bi), lambda i, j: (0, i)),        # pos_i
+            pl.BlockSpec((1, bi), lambda i, j: (0, i)),        # ev_i
+            pl.BlockSpec((1, bi), lambda i, j: (0, i)),        # idx_i
             pl.BlockSpec((1, bj), lambda i, j: (0, j)),        # pos_j
             pl.BlockSpec((1, bj), lambda i, j: (0, j)),        # ev_j
             pl.BlockSpec((1, bj), lambda i, j: (0, j)),        # idx_j
         ],
-        out_specs=pl.BlockSpec((1, BLOCK_I), lambda i, j: (0, i)),
+        out_specs=pl.BlockSpec((1, bi), lambda i, j: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, np_), jnp.int32),
-        scratch_shapes=[pltpu.VMEM((1, BLOCK_I), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((1, bi), jnp.int32)],
         interpret=interpret,
     )(posp[None, :], evp[None, :], idx[None, :],
       posp[None, :], evp[None, :], idx[None, :])
     return out[0, :n]
+
+
+# --------------------------------------------------------------------------
+# Windowed (position-sorted) counting: O(N * W) instead of O(N^2)
+# --------------------------------------------------------------------------
+
+def _win_kernel(pos_i_ref, ev_i_ref, gid_i_ref, pos_j_ref, ev_j_ref,
+                gid_j_ref, out_ref, count_ref, *, comm_range: float,
+                e_tau: float, n_valid: int, hops: int, nb: int):
+    """Grid (row block i, window offset j): candidate block ``i + j -
+    hops`` — at most ``hops`` sorted blocks per side, clamped at the
+    array edges (the clamp duplicates an edge block; the ``pl.when``
+    skips the duplicate so nothing is double-counted)."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        count_ref[...] = jnp.zeros_like(count_ref)
+
+    tgt = i + j - hops
+
+    @pl.when((tgt >= 0) & (tgt < nb))
+    def _acc():
+        pi = pos_i_ref[0, :]
+        ei = ev_i_ref[0, :]
+        gi = gid_i_ref[0, :]
+        pj = pos_j_ref[0, :]
+        ej = ev_j_ref[0, :]
+        gj = gid_j_ref[0, :]
+        d = jnp.abs(pi[:, None] - pj[None, :])
+        ok = (d <= comm_range) & (ej[None, :] >= e_tau) \
+            & (gj[None, :] < n_valid)
+        better = (ej[None, :] > ei[:, None]) | (
+            (ej[None, :] == ei[:, None]) & (gj[None, :] < gi[:, None]))
+        count_ref[...] += jnp.sum((ok & better).astype(jnp.int32),
+                                  axis=1)[None, :]
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _fin():
+        out_ref[...] = count_ref[...]
+
+
+def windowed_counts_pallas(sp: jax.Array, se: jax.Array, sg: jax.Array, *,
+                           comm_range: float, e_tau: float, n_valid: int,
+                           window: int, block: int,
+                           interpret: bool = True) -> jax.Array:
+    """Better-neighbour counts over *position-sorted* (M,) arrays already
+    padded to a multiple of ``block`` (sentinels pos=1e18 / ev=-1e18 /
+    gid >= ``n_valid``).  Each row block only visits the candidate blocks
+    covering ``window`` sorted neighbours per side, so the sweep is
+    O(M * (window + block)) — the windowed core of the DCS election."""
+    m = sp.shape[0]
+    nb = m // block
+    hops = -(-int(window) // block)
+    row = pl.BlockSpec((1, block), lambda i, j: (0, i))
+    cand = pl.BlockSpec((1, block),
+                        lambda i, j: (0, jnp.clip(i + j - hops, 0, nb - 1)))
+    out = pl.pallas_call(
+        functools.partial(_win_kernel, comm_range=float(comm_range),
+                          e_tau=float(e_tau), n_valid=int(n_valid),
+                          hops=hops, nb=nb),
+        grid=(nb, 2 * hops + 1),
+        in_specs=[row, row, row, cand, cand, cand],
+        out_specs=row,
+        out_shape=jax.ShapeDtypeStruct((1, m), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, block), jnp.int32)],
+        interpret=interpret,
+    )(sp.astype(jnp.float32)[None, :], se.astype(jnp.float32)[None, :],
+      sg.astype(jnp.int32)[None, :], sp.astype(jnp.float32)[None, :],
+      se.astype(jnp.float32)[None, :], sg.astype(jnp.int32)[None, :])
+    return out[0]

@@ -166,6 +166,27 @@ def neighbor_elect(pos, evals, *, comm_range: float, top_m: int,
                                    top_m=top_m, e_tau=e_tau)
 
 
+def neighbor_elect_windowed(pos, evals, *, comm_range: float, top_m: int,
+                            e_tau: float, window: int,
+                            impl: Optional[str] = None
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """O(N*W) windowed election -> ``(mask (N,) int32, overflow ()
+    int32)``.  ``overflow == 0`` certifies the mask bit-identical to
+    ``neighbor_elect``; callers re-run the dense election otherwise.
+    ``pallas`` routes the sorted counting sweep through
+    ``windowed_counts_pallas``; ``oracle`` is the naive ref (dense mask +
+    rank-distance overflow check, tests only)."""
+    m = _impl(impl)
+    if m == "oracle":
+        return kref.windowed_elect_ref(pos, evals, comm_range=comm_range,
+                                       top_m=top_m, e_tau=e_tau,
+                                       window=window)
+    from repro.core.elect import windowed_elect
+    return windowed_elect(pos, evals, comm_range=comm_range, top_m=top_m,
+                          e_tau=e_tau, window=window,
+                          impl="pallas" if m == "pallas" else "jnp")
+
+
 # --------------------------------------------------------------------------
 # Selective scan (Mamba-1)
 # --------------------------------------------------------------------------

@@ -159,6 +159,31 @@ def neighbor_elect_ref(pos: jax.Array, evals: jax.Array, *,
     return selected.astype(jnp.int32)
 
 
+def windowed_elect_ref(pos: jax.Array, evals: jax.Array, *,
+                       comm_range: float, top_m: int, e_tau: float,
+                       window: int) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the windowed election contract: (mask, overflow).
+
+    The mask is always the exact dense election; ``overflow`` is 1 iff
+    some vehicle has a valid in-range neighbour more than ``window``
+    position-sorted ranks away — i.e. iff a ``window``-wide sorted sweep
+    could not have seen every comparison.  A windowed implementation must
+    match the mask whenever *its own* overflow flag is 0, and must flag
+    whenever this oracle flags (it may over-flag near float boundaries,
+    never under-flag)."""
+    n = pos.shape[0]
+    mask = neighbor_elect_ref(pos, evals, comm_range=comm_range,
+                              top_m=top_m, e_tau=e_tau)
+    order = jnp.argsort(pos)
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
+    d = jnp.abs(pos[:, None] - pos[None, :])
+    validc = (d <= comm_range) & (evals[None, :] >= e_tau)
+    far = jnp.abs(rank[:, None] - rank[None, :]) > window
+    overflow = jnp.any(validc & far).astype(jnp.int32)
+    return mask, overflow
+
+
 # --------------------------------------------------------------------------
 # Selective scan (Mamba-1)
 # --------------------------------------------------------------------------

@@ -1,0 +1,55 @@
+"""Persistent jit compilation cache wiring (ISSUE 9 satellite).
+
+Sweep workers and ``fl_sim`` re-trace the same round executables for
+every (seed, scheme, partition) cell; on CPU the XLA pipeline dominates
+short runs.  ``enable_jit_cache`` points jax's persistent compilation
+cache at a directory so repeat launches (and sibling sweep workers) hit
+disk instead of recompiling.  CPU compiles are fast and small, so the
+default persistence thresholds (min compile seconds / min entry bytes)
+would skip everything — both are forced to "always persist".
+"""
+from __future__ import annotations
+
+import logging
+import os
+from typing import Optional
+
+logger = logging.getLogger(__name__)
+
+
+def resolve_cache_dir(arg: Optional[str], output_path: str) -> Optional[str]:
+    """The effective cache directory for ``--jit-cache-dir``.
+
+    ``None`` (flag absent) defaults to ``.jit-cache`` next to the run's
+    output file; an explicit empty string or "none" disables caching."""
+    if arg is not None:
+        if arg.strip().lower() in ("", "none", "off"):
+            return None
+        return arg
+    base = os.path.dirname(os.path.abspath(output_path))
+    return os.path.join(base, ".jit-cache")
+
+
+def enable_jit_cache(path: Optional[str]) -> Optional[str]:
+    """Activate jax's persistent compilation cache at ``path``.
+
+    Must run after jax import but before the first jit compilation.
+    Returns the path (or None when disabled) for logging."""
+    if not path:
+        return None
+    import jax
+    os.makedirs(path, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", path)
+    # CPU executables compile in <1s and serialize small; the default
+    # thresholds would persist nothing
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    logger.info("persistent jit cache at %s", path)
+    return path
+
+
+def add_cache_arguments(ap) -> None:
+    ap.add_argument("--jit-cache-dir", default=None, metavar="DIR",
+                    help="persistent jit compilation cache directory "
+                         "(default: .jit-cache beside the output file; "
+                         "'none' disables)")

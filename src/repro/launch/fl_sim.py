@@ -55,6 +55,10 @@ def main(argv=None) -> int:
     # argparse only below — jax must not initialize before the mesh
     # context can force emulated host devices
     from repro.fl.runconfig import add_run_arguments
+    from repro.launch.cache import add_cache_arguments, resolve_cache_dir
+    from repro.launch.multihost import (add_multihost_arguments,
+                                        multihost_from_args, should_spawn,
+                                        spawn_multihost)
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--scheme", choices=SCHEMES + ("all",), default="dcs")
@@ -66,23 +70,41 @@ def main(argv=None) -> int:
                     default="uniform")
     add_run_arguments(ap)        # mesh / fused probe / overlap / server /
     #                              churn / staleness / cadence (RunConfig)
+    add_multihost_arguments(ap)  # --multihost P + hidden child flags
+    add_cache_arguments(ap)      # --jit-cache-dir
     ap.add_argument("--out", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if should_spawn(args):
+        # parent of a --multihost P launch: re-exec ourselves P times
+        # with the coordinator flags appended and wait
+        return spawn_multihost("repro.launch.fl_sim",
+                               list(argv) if argv is not None
+                               else __import__("sys").argv[1:],
+                               args.multihost)
 
     # --mesh may force emulated host devices, which only works before the
     # jax backend initializes — so the mesh context comes first and the
     # simulator imports stay inside main
     from repro.launch.mesh import client_mesh_context
-    with client_mesh_context(args.mesh) as mesh:
+    with client_mesh_context(args.mesh,
+                             multihost=multihost_from_args(args)) as mesh:
+        import jax
         from repro.fl.mobility import MobilityConfig
         from repro.fl.rounds import FLSimulation
         from repro.fl.runconfig import RunConfig
-        if mesh is not None:
+        from repro.launch.cache import enable_jit_cache
+        is_lead = jax.process_index() == 0
+        enable_jit_cache(resolve_cache_dir(args.jit_cache_dir,
+                                           args.out or "fl_sim.json"))
+        if mesh is not None and is_lead:
             print(f"[fl_sim] client mesh: {dict(mesh.shape)} over "
-                  f"{mesh.devices.size} devices", flush=True)
+                  f"{mesh.devices.size} devices"
+                  + (f" / {jax.process_count()} processes"
+                     if jax.process_count() > 1 else ""), flush=True)
         run = RunConfig.from_args(args)
-        if run.server == "event":
+        if run.server == "event" and is_lead:
             print(f"[fl_sim] event-driven server: churn={run.churn_rate} "
                   f"staleness={run.staleness} lam={run.staleness_lambda} "
                   f"cadence={run.agg_cadence_s or 'round period'}",
@@ -104,11 +126,12 @@ def main(argv=None) -> int:
             dt = time.time() - t0
             accs = [h["accuracy"] for h in hist]
             nsel = sum(h["n_selected"] for h in hist) / len(hist)
-            print(f"[fl_sim] {scheme}: final acc {accs[-1]:.3f} "
-                  f"(best {max(accs):.3f}), avg selected {nsel:.2f}, "
-                  f"{dt:.0f}s", flush=True)
+            if is_lead:
+                print(f"[fl_sim] {scheme}: final acc {accs[-1]:.3f} "
+                      f"(best {max(accs):.3f}), avg selected {nsel:.2f}, "
+                      f"{dt:.0f}s", flush=True)
             results[scheme] = hist
-    if args.out:
+    if args.out and is_lead:     # one writer in a multi-process launch
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1)
         print(f"[fl_sim] wrote {args.out}")

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import contextlib
 import os
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -52,6 +52,42 @@ def make_clients_mesh(n_shards: int = 0) -> Mesh:
     return Mesh(np.asarray(devices[:n]), (CLIENT_AXIS,))
 
 
+def init_distributed(coordinator: str, num_processes: int,
+                     process_id: int, local_devices: int = 1) -> None:
+    """Join a multi-process jax runtime (``--multihost`` children).
+
+    Must run before the first jax operation: the host-device count flag
+    and the CPU collectives backend are only read at backend init.  On
+    CPU, cross-process collectives go through gloo; each process
+    contributes ``local_devices`` emulated host devices, so the global
+    device count is ``num_processes * local_devices``."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{local_devices}".strip())
+    jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=num_processes,
+                               process_id=process_id)
+
+
+def make_multihost_clients_mesh(n_shards: int) -> Mesh:
+    """1-D ``("clients",)`` mesh over the GLOBAL device list of an
+    initialized multi-process runtime.  ``jax.devices()`` orders global
+    devices by (process_index, local id), so shard ``d`` lives on
+    process ``d // (K / P)`` — the per-host client-loading seam in
+    ``fl/rounds.py`` relies on that contiguity."""
+    devices = jax.devices()
+    if n_shards != len(devices):
+        raise ValueError(
+            f"multihost clients mesh wants clients={n_shards} but the "
+            f"distributed runtime exposes {len(devices)} global devices "
+            f"({jax.process_count()} processes x "
+            f"{len(jax.local_devices())} local)")
+    return Mesh(np.asarray(devices), (CLIENT_AXIS,))
+
+
 def parse_mesh_spec(spec: str) -> Dict[str, int]:
     """``"clients=8"`` (comma-separable) -> ``{"clients": 8}``."""
     out: Dict[str, int] = {}
@@ -68,12 +104,36 @@ def parse_mesh_spec(spec: str) -> Dict[str, int]:
 
 
 @contextlib.contextmanager
-def client_mesh_context(spec: Optional[str]):
+def client_mesh_context(spec: Optional[str],
+                        multihost: Optional[Tuple[str, int, int]] = None):
     """``--mesh`` handling shared by the FL launchers: ``"clients=K"``
     builds the K-way clients mesh (forcing K emulated CPU host devices
     when the backend has not initialized yet) and activates it plus the
     logical sharding rules for every simulation constructed inside.
-    ``None``/empty is a no-op single-device context."""
+    ``None``/empty is a no-op single-device context.
+
+    ``multihost=(coordinator, num_processes, process_id)`` — a spawned
+    ``--multihost`` child — first joins the distributed runtime; the
+    spec's ``clients=K`` is then the GLOBAL extent (``K %%
+    num_processes == 0``, each process contributing ``K / P`` emulated
+    devices) and the mesh spans every process."""
+    if multihost is not None:
+        coord, procs, pid = multihost
+        if not spec:
+            raise ValueError("--multihost needs --mesh clients=K (the "
+                             "client axis is what spans the processes)")
+        axes = parse_mesh_spec(spec)
+        k = axes.get(CLIENT_AXIS, 1)
+        if procs < 1 or k % procs != 0:
+            raise ValueError(
+                f"--mesh clients={k} must divide evenly over "
+                f"--multihost {procs} processes")
+        init_distributed(coord, procs, pid, local_devices=k // procs)
+        mesh = make_multihost_clients_mesh(k)
+        from repro.sharding.api import DEFAULT_RULES, logical_sharding
+        with mesh, logical_sharding(mesh, DEFAULT_RULES):
+            yield mesh
+        return
     if not spec:
         yield None
         return

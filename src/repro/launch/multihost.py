@@ -1,0 +1,89 @@
+"""Multi-process launch plumbing (jax-free: argparse + subprocess only).
+
+``--multihost P`` runs a launcher as ``P`` cooperating jax processes —
+on CPU this *emulates* a multi-host fleet by spawning ``P`` copies of
+the same command wired to one local coordinator, each owning
+``K / P`` of the ``clients`` mesh devices; on a real multi-host slice
+the same flags describe the actual coordinator/process topology.
+
+The spawn protocol is self-re-execution: the parent parses
+``--multihost P``, picks a free coordinator port, and re-launches its
+own ``python -m <module> <argv>`` ``P`` times with the hidden
+``--_mh-coord/--_mh-procs/--_mh-proc-id`` flags appended; a child sees
+``--_mh-proc-id`` and initializes ``jax.distributed`` instead of
+re-spawning.  Output-writing call sites gate on ``jax.process_index()
+== 0``.  This module stays importable before jax so launchers can parse
+flags without initializing any backend.
+"""
+from __future__ import annotations
+
+import socket
+import subprocess
+import sys
+from typing import List, Optional, Sequence, Tuple
+
+
+def add_multihost_arguments(ap) -> None:
+    """Install ``--multihost`` plus the hidden child-process flags."""
+    ap.add_argument("--multihost", type=int, default=0, metavar="P",
+                    help="run as P cooperating jax processes (CPU: "
+                         "emulated via spawned local processes); the "
+                         "mesh's clients=K axis spans all of them "
+                         "(K %% P == 0)")
+    ap.add_argument("--_mh-coord", default=None, help=_SUPPRESS())
+    ap.add_argument("--_mh-procs", type=int, default=None,
+                    help=_SUPPRESS())
+    ap.add_argument("--_mh-proc-id", type=int, default=None,
+                    help=_SUPPRESS())
+
+
+def _SUPPRESS() -> str:
+    import argparse
+    return argparse.SUPPRESS
+
+
+def multihost_from_args(args) -> Optional[Tuple[str, int, int]]:
+    """The child-process distributed-init triple ``(coordinator,
+    num_processes, process_id)``, or None outside a spawned child."""
+    pid = getattr(args, "_mh_proc_id", None)
+    if pid is None:
+        return None
+    return (args._mh_coord, int(args._mh_procs), int(pid))
+
+
+def should_spawn(args) -> bool:
+    """True in the parent process of a ``--multihost P`` launch (P > 1
+    and not already a spawned child)."""
+    return (getattr(args, "multihost", 0) or 0) > 1 \
+        and getattr(args, "_mh_proc_id", None) is None
+
+
+def free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def spawn_multihost(module: str, argv: Sequence[str], nprocs: int,
+                    *, timeout: Optional[float] = None) -> int:
+    """Re-launch ``python -m module argv`` as ``nprocs`` coordinated
+    child processes and wait.  Child 0 streams to the parent's
+    stdout/stderr (it owns all output writes); the others keep stderr
+    for crash visibility but drop stdout.  Returns the max exit code."""
+    coord = f"127.0.0.1:{free_port()}"
+    procs: List[subprocess.Popen] = []
+    for pid in range(nprocs):
+        cmd = [sys.executable, "-m", module, *argv,
+               "--_mh-coord", coord, "--_mh-procs", str(nprocs),
+               "--_mh-proc-id", str(pid)]
+        procs.append(subprocess.Popen(
+            cmd, stdout=None if pid == 0 else subprocess.DEVNULL))
+    codes = []
+    try:
+        for p in procs:
+            codes.append(p.wait(timeout=timeout))
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+    return max(codes) if codes else 0

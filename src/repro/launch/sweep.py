@@ -226,10 +226,15 @@ def run_seed_group(scheme: str, classes_per_client: int, distribution: str,
             states = dispatch(r)
         nxt = None
         if overlap:
-            hosts = [jax.device_get(s) for s in states]
+            # the device_get fence also surfaces elect_overflow: any
+            # flagged seed re-runs its prefix through the dense gather
+            # before training, keeping windowed masks bit-identical
+            hosts = [sim.resolve_elect_overflow(r, jax.device_get(s))
+                     for sim, s in zip(sims, states)]
             for drv, host in zip(drivers, hosts):    # train dispatch
                 drv._dispatch_training(r, host)
-            pend = [evaluate_accuracy_async(sim.params, sim.test_images,
+            pend = [evaluate_accuracy_async(sim._eval_params(),
+                                            sim.test_images,
                                             sim.test_labels, batch=256)
                     for sim in sims]
             if r + 1 < rounds:                       # round-ahead
@@ -293,9 +298,13 @@ def _run_group_worker(args: Tuple) -> List[Dict]:
     rebuilds the client mesh inside the worker's own jax runtime; the
     frozen ``RunConfig`` pickles by value."""
     scheme, classes, dist, seeds, rounds, cfg_fn, vmap_prefix, \
-        mesh_spec, overlap, run = args
+        mesh_spec, overlap, run, cache_dir = args
+    from repro.launch.cache import enable_jit_cache
     from repro.launch.mesh import client_mesh_context
     with client_mesh_context(mesh_spec):
+        # sibling workers retrace identical executables; the shared
+        # persistent cache lets one worker's compile serve the rest
+        enable_jit_cache(cache_dir)
         return run_seed_group(scheme, classes, dist, seeds, rounds,
                               cfg_fn=cfg_fn, vmap_prefix=vmap_prefix,
                               overlap=overlap, run=run)
@@ -307,6 +316,7 @@ def sweep(schemes: Sequence[str], classes_list: Sequence[int],
           workers: int = 1, mesh_spec: Optional[str] = None,
           overlap: Optional[bool] = None,
           runs: Optional[Sequence[RunConfig]] = None,
+          cache_dir: Optional[str] = None,
           log: Optional[Callable[[str], None]] = None) -> List[Dict]:
     """Run the full grid — every cell under every async scenario — and
     return aggregated tidy rows.
@@ -334,7 +344,7 @@ def sweep(schemes: Sequence[str], classes_list: Sequence[int],
         import multiprocessing as mp
         from concurrent.futures import ProcessPoolExecutor
         work = [(s, c, d, tuple(seeds), rounds, cfg_fn, vmap_prefix,
-                 mesh_spec, overlap, run)
+                 mesh_spec, overlap, run, cache_dir)
                 for (s, c, d), run in jobs]
         with ProcessPoolExecutor(
                 max_workers=workers,
@@ -421,11 +431,25 @@ def main(argv=None) -> int:
     ap.add_argument("--agg-cadences", type=_float_list, default=None,
                     help="comma list of aggregation cadences in simulated "
                          "seconds (scenario axis; 0 = the round period)")
+    from repro.launch.cache import add_cache_arguments, resolve_cache_dir
+    from repro.launch.multihost import (add_multihost_arguments,
+                                        multihost_from_args, should_spawn,
+                                        spawn_multihost)
+    add_multihost_arguments(ap)
+    add_cache_arguments(ap)
     ap.add_argument("--out", default="sweep.csv")
     args = ap.parse_args(argv)
 
     if args.fast and args.paper_profile:
         ap.error("--fast and --paper-profile are mutually exclusive")
+    if args.multihost > 1 and args.workers > 1:
+        ap.error("--multihost and --workers are mutually exclusive (a "
+                 "multi-process mesh is already one placement domain)")
+    if should_spawn(args):
+        import sys
+        return spawn_multihost("repro.launch.sweep",
+                               list(argv) if argv is not None
+                               else sys.argv[1:], args.multihost)
     if args.seeds < 1:
         ap.error("--seeds must be >= 1")
     if args.rounds < 1:
@@ -452,24 +476,35 @@ def main(argv=None) -> int:
                              or (base_run.agg_cadence_s or 0.0,))
 
     t0 = time.time()
+    cache_dir = resolve_cache_dir(args.jit_cache_dir, args.out)
+    from repro.launch.cache import enable_jit_cache
     from repro.launch.mesh import client_mesh_context
-    with client_mesh_context(args.mesh) as mesh:
-        if mesh is not None:
+    with client_mesh_context(args.mesh,
+                             multihost=multihost_from_args(args)) as mesh:
+        is_lead = jax.process_index() == 0
+        if args.workers <= 1:
+            enable_jit_cache(cache_dir)   # workers enable their own
+        if mesh is not None and is_lead:
             print(f"[sweep] client mesh: {dict(mesh.shape)} over "
-                  f"{mesh.devices.size} devices", flush=True)
+                  f"{mesh.devices.size} devices"
+                  + (f" / {jax.process_count()} processes"
+                     if jax.process_count() > 1 else ""), flush=True)
         rows = sweep(schemes, classes_list, distributions,
                      seeds=range(args.seeds), rounds=args.rounds,
                      cfg_fn=cfg_fn, vmap_prefix=not args.no_vmap,
                      workers=args.workers, mesh_spec=args.mesh,
-                     runs=runs,
-                     log=lambda s: print(s, flush=True))
+                     runs=runs, cache_dir=cache_dir,
+                     log=(lambda s: print(s, flush=True)) if is_lead
+                     else (lambda s: None))
     csv_text = rows_to_csv(rows)
-    with open(args.out, "w") as f:
-        f.write(csv_text)
-    print(f"[sweep] wrote {len(rows)} rows "
-          f"({len(schemes)}x{len(classes_list)}x{len(distributions)} cells "
-          f"x {len(runs)} scenarios x {args.seeds} seeds x {args.rounds} "
-          f"rounds) to {args.out} in {time.time() - t0:.0f}s")
+    if is_lead:                  # one writer in a multi-process launch
+        with open(args.out, "w") as f:
+            f.write(csv_text)
+        print(f"[sweep] wrote {len(rows)} rows "
+              f"({len(schemes)}x{len(classes_list)}x{len(distributions)} "
+              f"cells x {len(runs)} scenarios x {args.seeds} seeds x "
+              f"{args.rounds} rounds) to {args.out} in "
+              f"{time.time() - t0:.0f}s")
     return 0
 
 

@@ -61,6 +61,15 @@ def mesh_axis_size(mesh: Optional[Mesh], axis: str) -> int:
     return int(dict(mesh.shape).get(axis, 1))
 
 
+def mesh_is_multihost(mesh: Optional[Mesh]) -> bool:
+    """True iff ``mesh`` spans more than one jax process — the sharded
+    FL pipeline then keeps its host-consumed outputs replicated and its
+    per-client statics addressable-shard-only."""
+    if mesh is None:
+        return False
+    return len({d.process_index for d in mesh.devices.flat}) > 1
+
+
 def _axis_size(mesh: Mesh, assign: AxisAssign) -> int:
     if assign is None:
         return 1
@@ -179,7 +188,14 @@ def sweep_devices() -> Sequence[jax.Device]:
     mesh = current_mesh()
     if mesh is not None:
         if dict(mesh.shape).get(CLIENT_AXIS, 1) > 1:
-            return [mesh.devices.flat[0]]
+            # single entry = this process's first *addressable* mesh
+            # device: on a multi-process mesh a remote device cannot
+            # receive host transfers, so it is unusable as a
+            # jax.default_device placement target
+            pidx = jax.process_index()
+            local = [d for d in mesh.devices.flat
+                     if d.process_index == pidx]
+            return [local[0] if local else mesh.devices.flat[0]]
         return list(mesh.devices.flat)
     return list(jax.devices())
 
