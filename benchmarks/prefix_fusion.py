@@ -128,8 +128,10 @@ def _append_artifact(cells: List[Dict]) -> str:
     data.setdefault("runs", []).append(
         {"unix_time": int(time.time()), "profile": "table3-shaped",
          "probe_batch": PROBE_BATCH, "cells": cells})
-    with open(path, "w") as f:
-        json.dump(data, f, indent=1)
+    # atomic append-rewrite: a killed bench never tears the cumulative
+    # artifact (repro.ioutil, ISSUE 10)
+    from repro.ioutil import write_atomic_json
+    write_atomic_json(path, data, indent=1)
     return path
 
 

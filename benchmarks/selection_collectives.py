@@ -342,8 +342,10 @@ def _append_selection_artifact(profile: str, cells: List[Dict]) -> None:
             data = {"runs": []}
     data.setdefault("runs", []).append(
         {"unix_time": int(time.time()), "profile": profile, "cells": cells})
-    with open(path, "w") as f:
-        json.dump(data, f, indent=1)
+    # atomic append-rewrite: a killed bench never tears the cumulative
+    # artifact (repro.ioutil, ISSUE 10)
+    from repro.ioutil import write_atomic_json
+    write_atomic_json(path, data, indent=1)
 
 
 def bench_windowed_scaling() -> List[str]:

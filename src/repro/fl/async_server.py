@@ -56,6 +56,8 @@ import numpy as np
 from repro.fl import pipeline
 from repro.fl.aggregation import fedavg_masked
 from repro.fl.client import evaluate_accuracy_async
+from repro.fl.rounds import (build_round_checkpointer, checkpoint_round,
+                             resume_rows)
 from repro.fl.timing import staleness_weight
 
 # the pool FedAvg must NOT donate: a landing tick can merge stacks that
@@ -67,6 +69,11 @@ _fedavg_pool = jax.jit(lambda merged, weights: fedavg_masked(merged,
 
 # rounds-behind histogram bins: delays 0, 1, 2, 3+ (aggregated updates)
 _HIST_BINS = 4
+
+# pending-entry scalar fields and their host types (checkpoint restore
+# re-coerces through these so a JSON/npz round-trip cannot drift a type)
+_ENTRY_SCALARS = {"src": int, "n": int, "delay": int,
+                  "anchor": float, "scale": float}
 
 
 class EventDrivenServer:
@@ -145,7 +152,7 @@ class EventDrivenServer:
         sim = self.sim
         cfg = sim.cfg
         mask = np.asarray(host["mask"])
-        sim.last_mask = mask
+        sim._record_participation(mask)
         survivors = np.asarray(host["survivors"]).astype(bool)
         alive = np.asarray(host["alive_at_done"]).astype(bool)
         t_done = np.asarray(host["t_done"], np.float64)
@@ -180,8 +187,9 @@ class EventDrivenServer:
                 w_data = float(sim.n_valid[bucket].sum())
                 self._pending.setdefault(int(k), []).append({
                     "src": rnd, "num": num, "den": den,
-                    "anchor": w_data * (1.0 - s),
-                    "n": int(bucket.sum()), "delay": delay, "scale": s})
+                    "anchor": float(w_data * (1.0 - s)),
+                    "n": int(bucket.sum()), "delay": delay,
+                    "scale": float(s)})
             return
         entries = pipeline.train_groups(
             sim.params, sim.groups, sim._group_steps, train_mask, keys,
@@ -199,8 +207,9 @@ class EventDrivenServer:
             self._pending.setdefault(int(k), []).append({
                 "src": rnd, "merged": merged,
                 "w": (wk * np.float32(s) if s != 1.0 else wk),
-                "anchor": live * (1.0 - s),
-                "n": int((wk > 0).sum()), "delay": delay, "scale": s})
+                "anchor": float(live * (1.0 - s)),
+                "n": int((wk > 0).sum()), "delay": delay,
+                "scale": float(s)})
 
     def _process_due_ticks(self, rnd: int) -> None:
         """Fire every aggregation tick due by the end of round ``rnd``
@@ -248,6 +257,58 @@ class EventDrivenServer:
                 stats["eff"] += it["n"] * it["scale"]
                 stats["hist"][min(it["delay"], _HIST_BINS - 1)] += it["n"]
 
+    # -- preemption safety (ISSUE 10) ----------------------------------
+    def capture_state(self) -> Dict:
+        """The wrapped simulation's state plus the streaming server's
+        own: the pending landing-tick pools (device pytrees pulled to
+        host) and the open per-round stat accumulators.  Together these
+        make a mid-stream kill invisible — stragglers enqueued rounds
+        ago land at the same tick with the same weights after resume."""
+        pending = {}
+        for k, items in self._pending.items():
+            out = []
+            for it in items:
+                e: Dict = {}
+                for name, v in it.items():
+                    if name in ("merged", "num", "den"):
+                        e[name] = jax.device_get(v)
+                    elif name == "w":
+                        e[name] = np.asarray(v, np.float32)
+                    else:
+                        e[name] = _ENTRY_SCALARS[name](v)
+                out.append(e)
+            pending[str(k)] = out
+        stats = {str(r): {"n_agg": int(s["n_agg"]),
+                          "n_stale": int(s["n_stale"]),
+                          "eff": float(s["eff"]),
+                          "hist": [int(h) for h in s["hist"]]}
+                 for r, s in self._stats.items()}
+        return {"sim": self.sim.capture_state(),
+                "pending": pending, "stats": stats}
+
+    def restore_state(self, state: Dict,
+                      extra: Optional[Dict] = None) -> None:
+        self.sim.restore_state(state["sim"], extra)
+        self._pending = {}
+        for k, items in state["pending"].items():
+            out = []
+            for it in items:
+                e = {}
+                for name, v in it.items():
+                    if name in ("merged", "num", "den"):
+                        e[name] = jax.tree.map(jnp.asarray, v)
+                    elif name == "w":
+                        e[name] = np.asarray(v, np.float32)
+                    else:
+                        e[name] = _ENTRY_SCALARS[name](v)
+                out.append(e)
+            self._pending[int(k)] = out
+        self._stats = {int(r): {"n_agg": int(s["n_agg"]),
+                                "n_stale": int(s["n_stale"]),
+                                "eff": float(s["eff"]),
+                                "hist": [int(h) for h in s["hist"]]}
+                       for r, s in state["stats"].items()}
+
     # -- metrics rows ---------------------------------------------------
     def _round_row(self, rnd: int, host: Dict, acc_count: jax.Array,
                    n_test: int) -> Dict[str, float]:
@@ -275,21 +336,31 @@ class EventDrivenServer:
 
     # -- drivers ---------------------------------------------------------
     def run(self, n_rounds: Optional[int] = None,
-            overlap: Optional[bool] = None) -> List[Dict[str, float]]:
+            overlap: Optional[bool] = None, *,
+            checkpointer=None,
+            resume: Optional[bool] = None) -> List[Dict[str, float]]:
         """Drive ``n`` rounds.  Identical schedule to the sync drivers —
         serial or round-ahead — with the tick pool swapped in behind
         ``_dispatch_training``, so the prefix executables and dispatch
-        order match the barrier drivers call for call."""
+        order match the barrier drivers call for call.  Checkpoint /
+        resume mirrors ``FLSimulation.run`` with the pending-tick queue
+        riding along in every snapshot."""
         sim = self.sim
         n = n_rounds or sim.cfg.n_rounds
+        ckpt = build_round_checkpointer(self.run_cfg, checkpointer)
+        resume = self.run_cfg.resume if resume is None else resume
+        rows, start = resume_rows(self, ckpt, resume)
         if overlap is None:
             overlap = self.run_cfg.overlap_rounds
         if not overlap:
-            return [self.finish_round(r, sim.selection_state(r))
-                    for r in range(n)]
-        rows: List[Dict[str, float]] = []
-        state = sim.selection_state(0)
-        for r in range(n):
+            for r in range(start, n):
+                rows.append(self.finish_round(r, sim.selection_state(r)))
+                checkpoint_round(self, ckpt, r, rows)
+            return rows
+        if start >= n:
+            return rows
+        state = sim.selection_state(start)
+        for r in range(start, n):
             host = jax.device_get(state)     # fence: the cohort gather
             host = sim.resolve_elect_overflow(r, host)
             self._dispatch_training(r, host)
@@ -298,4 +369,5 @@ class EventDrivenServer:
             if r + 1 < n:                    # round-ahead: r+1's prefix
                 state = sim.selection_state(r + 1)
             rows.append(self._round_row(r, host, acc, n_test))
+            checkpoint_round(self, ckpt, r, rows)
         return rows

@@ -86,8 +86,51 @@ from repro.fl.partition import (PartitionConfig, partition,
                                 steps_per_epoch)
 from repro.fl.runconfig import ENGINES, RunConfig, resolve_run
 from repro.fl.schemes import get_scheme
+from repro.launch import faults
 from repro.models.cnn import init_cnn
 from repro.sharding.api import CLIENT_AXIS, mesh_is_multihost
+
+
+def build_round_checkpointer(run_cfg: RunConfig, checkpointer=None):
+    """The driver-facing checkpoint seam (ISSUE 10): an explicit
+    ``RoundCheckpointer`` wins; otherwise one is built from the run
+    config's ``checkpoint_dir``/``checkpoint_every``; ``None`` disables
+    checkpointing entirely."""
+    if checkpointer is not None:
+        return checkpointer
+    if run_cfg.checkpoint_dir:
+        from repro.train.checkpoint import RoundCheckpointer
+        return RoundCheckpointer(run_cfg.checkpoint_dir,
+                                 every=run_cfg.checkpoint_every)
+    return None
+
+
+def resume_rows(driver, ckpt, resume: bool):
+    """Restore ``driver`` (an ``FLSimulation`` or ``EventDrivenServer``)
+    from the latest good snapshot -> ``(rows_so_far, start_round)``.
+
+    Corrupt snapshots were already skipped (with a warning) inside
+    ``latest_good``; no snapshot at all means a fresh start — resume is
+    idempotent and safe to pass unconditionally."""
+    if not resume or ckpt is None:
+        return [], 0
+    got = ckpt.latest_good()
+    if got is None:
+        return [], 0
+    rnd, state, extra = got
+    driver.restore_state(state, extra)
+    return [dict(r) for r in extra.get("rows", [])], rnd + 1
+
+
+def checkpoint_round(driver, ckpt, rnd: int, rows, *,
+                     lead: bool = True) -> None:
+    """Snapshot the end-of-round state when due (lead process only),
+    then announce the fault-injection events the chaos suite keys on."""
+    if ckpt is not None and lead and ckpt.due(rnd):
+        ckpt.save_round(rnd, driver.capture_state(),
+                        extra={"rows": rows, "next_round": rnd + 1})
+        faults.fire("checkpoint-saved", round=rnd)
+    faults.fire("round-done", round=rnd)
 
 
 @dataclass
@@ -215,6 +258,9 @@ class FLSimulation:
             self.train_key = np.asarray(self.train_key)
             self.net_key = np.asarray(self.net_key)
         self.last_mask: Optional[np.ndarray] = None        # set per round
+        # lifetime per-client participation counts (selection mask hits);
+        # checkpointed so budget/fairness schemes survive preemption
+        self.participation = np.zeros(self.n, np.int64)
         self.statics = self._build_statics()
         self.stage_cfg = self._build_stage_cfg()
 
@@ -587,12 +633,84 @@ class FLSimulation:
         training/aggregation dispatch.  Returns as soon as the work is
         enqueued — ``self.params`` becomes a device future."""
         survivors = np.asarray(host["survivors"])
-        self.last_mask = np.asarray(host["mask"])
+        self._record_participation(host["mask"])
         keys = self._round_keys(rnd)
         if self.run_cfg.engine == "batched":
             self._train_batched(survivors, keys)
         else:
             self._train_loop(survivors, keys)
+
+    def _record_participation(self, mask) -> None:
+        """Track the round's selection mask and bump the lifetime
+        participation counters (single bookkeeping point for the sync
+        dispatch and the event server's enqueue)."""
+        self.last_mask = np.asarray(mask)
+        self.participation[self.last_mask > 0] += 1
+
+    # -- preemption safety (ISSUE 10) ----------------------------------
+    def capture_state(self) -> Dict:
+        """The complete mutable round state, as host arrays: params, all
+        PRNG bases, participation counters, the last selection mask and
+        the mobility field.  Everything else the rounds read is static
+        (rebuilt from ``FLSimConfig`` at construction), so restoring
+        this into a freshly constructed simulation reproduces the
+        uninterrupted trajectory bit-for-bit.
+
+        The PRNG bases and mobility arrays are constants per config —
+        they are captured anyway so ``restore_state`` can *verify* the
+        resuming process was constructed from the same config instead of
+        trusting the caller."""
+        return {
+            "params": jax.device_get(self.params),
+            "key": np.asarray(self.key),
+            "train_key": np.asarray(self.train_key),
+            "net_key": np.asarray(self.net_key),
+            "participation": np.asarray(self.participation),
+            "last_mask": (np.asarray(self.last_mask)
+                          if self.last_mask is not None
+                          else np.zeros(self.n, np.float32)),
+            "mobility": {
+                "x0": np.asarray(self.mobility.x0, np.float64),
+                "speeds": np.asarray(self.mobility.speeds, np.float64),
+                "jitter_phase": np.asarray(self.mobility._jitter_phase,
+                                           np.float64)},
+        }
+
+    def restore_state(self, state: Dict,
+                      extra: Optional[Dict] = None) -> None:
+        """Restore a ``capture_state`` snapshot.  Raises ``ValueError``
+        when the snapshot demonstrably came from a different
+        configuration (fleet size, seeds, mobility field)."""
+        part = np.asarray(state["participation"])
+        if part.shape != (self.n,):
+            raise ValueError(
+                f"checkpoint is for a {part.shape[0]}-client fleet; this "
+                f"simulation has {self.n} clients")
+        for name, cur in (("key", self.key), ("train_key", self.train_key),
+                          ("net_key", self.net_key)):
+            if not np.array_equal(np.asarray(state[name]), np.asarray(cur)):
+                raise ValueError(
+                    f"checkpoint PRNG base {name!r} does not match this "
+                    f"simulation's (different seed or network config)")
+        mob = state["mobility"]
+        for name, cur in (("x0", self.mobility.x0),
+                          ("speeds", self.mobility.speeds),
+                          ("jitter_phase", self.mobility._jitter_phase)):
+            if not np.array_equal(np.asarray(mob[name], np.float64),
+                                  np.asarray(cur, np.float64)):
+                raise ValueError(
+                    f"checkpoint mobility field {name!r} does not match "
+                    f"this simulation's configuration")
+        conv = np.asarray if self.multihost else jnp.asarray
+        self.params = jax.tree.map(conv, state["params"])
+        self.participation = part.astype(np.int64)
+        self.last_mask = np.asarray(state["last_mask"])
+        if faults.active("overflow", "resume"):
+            # chaos knob: clamp the windowed election's bucket capacity
+            # so every post-resume round overflows and exercises the
+            # dense-recovery path (masks stay exact by construction)
+            self.stage_cfg = dataclasses.replace(self.stage_cfg,
+                                                 elect_capacity=1)
 
     def _round_row(self, rnd: int, host: Dict, acc_count: jax.Array,
                    n_test: int) -> Dict[str, float]:
@@ -622,21 +740,42 @@ class FLSimulation:
         return row
 
     def run(self, n_rounds: Optional[int] = None,
-            overlap: Optional[bool] = None) -> List[Dict[str, float]]:
+            overlap: Optional[bool] = None, *,
+            checkpointer=None,
+            resume: Optional[bool] = None) -> List[Dict[str, float]]:
         """Drive ``n`` rounds; ``overlap`` defaults to the run config's
         round-ahead scheduler setting.  ``RunConfig(server="event")``
-        (or any async knob) routes through the event-driven server."""
+        (or any async knob) routes through the event-driven server.
+
+        Preemption safety (ISSUE 10): with a ``checkpointer`` (or the
+        run config's ``checkpoint_dir``) the complete round state is
+        snapshotted every ``checkpoint_every`` rounds; ``resume``
+        (default: the run config's) restores the latest good snapshot
+        and continues — the finished rows, masks and params are pinned
+        bit-identical to an uninterrupted run."""
         n = n_rounds or self.cfg.n_rounds
         if self.run_cfg.server == "event":
             from repro.fl.async_server import EventDrivenServer
-            return EventDrivenServer(self).run(n, overlap=overlap)
+            return EventDrivenServer(self).run(n, overlap=overlap,
+                                               checkpointer=checkpointer,
+                                               resume=resume)
+        ckpt = build_round_checkpointer(self.run_cfg, checkpointer)
+        resume = self.run_cfg.resume if resume is None else resume
+        rows, start = resume_rows(self, ckpt, resume)
         if overlap is None:
             overlap = self.run_cfg.overlap_rounds
-        if not overlap:
-            return [self.run_round(r) for r in range(n)]
-        return self.run_overlapped(n)
+        if overlap:
+            return self.run_overlapped(n, start=start, rows=rows,
+                                       checkpointer=ckpt)
+        lead = not self.multihost or jax.process_index() == 0
+        for r in range(start, n):
+            rows.append(self.run_round(r))
+            checkpoint_round(self, ckpt, r, rows, lead=lead)
+        return rows
 
-    def run_overlapped(self, n_rounds: int) -> List[Dict[str, float]]:
+    def run_overlapped(self, n_rounds: int, *, start: int = 0,
+                       rows: Optional[List[Dict[str, float]]] = None,
+                       checkpointer=None) -> List[Dict[str, float]]:
         """Round-ahead pipelined driver: identical rounds, pipelined
         dispatch.
 
@@ -651,10 +790,18 @@ class FLSimulation:
         idles waiting for host bookkeeping between rounds.  Rounds are
         bit-identical to the serial driver — same ops in the same
         order, only enqueued earlier (pinned in
-        tests/test_probe_fuzzy.py)."""
-        rows: List[Dict[str, float]] = []
-        state = self.selection_state(0)
-        for r in range(n_rounds):
+        tests/test_probe_fuzzy.py).
+
+        Resume slots in transparently: the prefix is pure in
+        ``(params, rnd)``, so the round-ahead dispatch a kill threw away
+        is re-issued identically from the restored ``params`` — rounds
+        ``start..n`` replay the uninterrupted schedule bit-for-bit."""
+        rows = [] if rows is None else rows
+        if start >= n_rounds:
+            return rows
+        lead = not self.multihost or jax.process_index() == 0
+        state = self.selection_state(start)
+        for r in range(start, n_rounds):
             host = jax.device_get(state)     # fence: the cohort gather
             host = self.resolve_elect_overflow(r, host)
             self._dispatch_training(r, host)
@@ -664,4 +811,5 @@ class FLSimulation:
             if r + 1 < n_rounds:             # round-ahead: r+1's prefix
                 state = self.selection_state(r + 1)
             rows.append(self._round_row(r, host, acc, n_test))
+            checkpoint_round(self, checkpointer, r, rows, lead=lead)
         return rows

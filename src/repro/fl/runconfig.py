@@ -74,6 +74,15 @@ class RunConfig:
     # gather, so masks stay bit-identical either way)
     elect: str = "auto"
     elect_window: int = 0                # sorted window per side (0 = auto)
+    # Preemption safety (ISSUE 10): when ``checkpoint_dir`` is set the
+    # drivers snapshot complete round state every ``checkpoint_every``
+    # rounds (atomic + checksummed; repro.train.checkpoint) and
+    # ``resume=True`` restores the latest good snapshot before running —
+    # the resumed trajectory's rows, masks and params are pinned
+    # bit-identical to an uninterrupted run.
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 1
+    resume: bool = False
 
     def resolved(self) -> "RunConfig":
         """Validate and normalize: any async knob promotes ``server`` to
@@ -102,6 +111,11 @@ class RunConfig:
         if self.elect_window < 0:
             raise ValueError(f"elect_window must be >= 0: "
                              f"{self.elect_window}")
+        if self.checkpoint_every < 1:
+            raise ValueError(f"checkpoint_every must be >= 1: "
+                             f"{self.checkpoint_every}")
+        if self.resume and not self.checkpoint_dir:
+            raise ValueError("resume=True requires checkpoint_dir")
         server = self.server
         if (self.churn_rate > 0.0 or self.staleness == "weighted"
                 or self.agg_cadence_s is not None):
@@ -162,10 +176,14 @@ class RunConfig:
                             ("staleness_lambda", "staleness_lambda"),
                             ("agg_cadence", "agg_cadence_s"),
                             ("elect", "elect"),
-                            ("elect_window", "elect_window")):
+                            ("elect_window", "elect_window"),
+                            ("checkpoint_dir", "checkpoint_dir"),
+                            ("checkpoint_every", "checkpoint_every")):
             v = getattr(args, attr, None)
             if v is not None:
                 kw[field] = v
+        if getattr(args, "resume", False):
+            kw["resume"] = True
         if kw.get("agg_cadence_s") == 0.0:       # CLI "0" = round period
             kw["agg_cadence_s"] = None
         return dataclasses.replace(run, **kw).resolved()
@@ -211,6 +229,15 @@ def add_run_arguments(ap) -> None:
     ap.add_argument("--elect-window", type=int, default=None,
                     help="windowed election: sorted neighbours per side "
                          "(0 = auto-size from fleet density)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for atomic per-round state snapshots "
+                         "(enables preemption-safe runs)")
+    ap.add_argument("--checkpoint-every", type=int, default=None,
+                    help="snapshot cadence in rounds (default 1)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest good checkpoint from "
+                         "--checkpoint-dir before running (bit-identical "
+                         "continuation; no-op when none exists)")
 
 
 def resolve_run(sim_cfg, run: Optional[RunConfig] = None) -> RunConfig:

@@ -1,0 +1,72 @@
+"""Atomic file writes (ISSUE 10): tmp file + ``os.replace``.
+
+Every durable artifact this repo emits — the sweep CSV, the cumulative
+``BENCH_*.json`` bench artifacts, ``fl_sim``'s results JSON and the
+round checkpoints — goes through ``write_atomic``: the payload lands in
+a same-directory temporary file, is fsync'd, and is renamed over the
+target in one ``os.replace``.  POSIX rename atomicity means a reader
+(or a resumed run) sees either the complete old file or the complete
+new file; a SIGKILL mid-write can never leave a torn artifact, only a
+stray ``*.tmp-*`` file that the next successful write ignores.
+
+``sha256_file`` backs the checkpoint manifest checksums
+(``repro.train.checkpoint``): corruption *between* runs (partial disk
+flush on power loss, bit rot, deliberate fault injection) is detected
+at read time instead of being silently loaded.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from typing import Any, Union
+
+
+def write_atomic(path: Union[str, os.PathLike], data: Union[str, bytes],
+                 *, sync: bool = True) -> None:
+    """Write ``data`` to ``path`` atomically (tmp file + ``os.replace``).
+
+    The temporary file lives in the target's directory so the final
+    rename never crosses a filesystem boundary.  On any failure the
+    temporary file is removed and the previous ``path`` contents (if
+    any) are left untouched."""
+    path = os.fspath(path)
+    directory = os.path.dirname(os.path.abspath(path))
+    os.makedirs(directory, exist_ok=True)
+    payload = data.encode("utf-8") if isinstance(data, str) else data
+    fd, tmp = tempfile.mkstemp(
+        prefix=os.path.basename(path) + ".tmp-", dir=directory)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(payload)
+            f.flush()
+            if sync:
+                os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def write_atomic_json(path: Union[str, os.PathLike], obj: Any,
+                      **json_kwargs: Any) -> None:
+    """``json.dump`` through ``write_atomic`` (one serialized payload,
+    one rename)."""
+    write_atomic(path, json.dumps(obj, **json_kwargs))
+
+
+def sha256_file(path: Union[str, os.PathLike],
+                chunk_bytes: int = 1 << 20) -> str:
+    """Hex sha256 of a file's contents (streamed)."""
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(chunk_bytes)
+            if not chunk:
+                break
+            h.update(chunk)
+    return h.hexdigest()

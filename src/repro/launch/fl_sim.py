@@ -120,7 +120,16 @@ def main(argv=None) -> int:
                 if not args.paper_profile else mk(scheme, seed=args.seed)
             cfg.mobility = MobilityConfig(distribution=args.distribution,
                                           seed=args.seed)
-            sim = FLSimulation(cfg, run=run)
+            srun = run
+            if run.checkpoint_dir:
+                # one snapshot directory per scheme, so --scheme all
+                # runs never overwrite each other's round state
+                import dataclasses
+                import os
+                srun = dataclasses.replace(
+                    run, checkpoint_dir=os.path.join(run.checkpoint_dir,
+                                                     scheme))
+            sim = FLSimulation(cfg, run=srun)
             t0 = time.time()
             hist = sim.run(args.rounds)
             dt = time.time() - t0
@@ -132,8 +141,8 @@ def main(argv=None) -> int:
                       f"{dt:.0f}s", flush=True)
             results[scheme] = hist
     if args.out and is_lead:     # one writer in a multi-process launch
-        with open(args.out, "w") as f:
-            json.dump(results, f, indent=1)
+        from repro.ioutil import write_atomic_json
+        write_atomic_json(args.out, results, indent=1)
         print(f"[fl_sim] wrote {args.out}")
     return 0
 

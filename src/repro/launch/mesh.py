@@ -60,16 +60,39 @@ def init_distributed(coordinator: str, num_processes: int,
     and the CPU collectives backend are only read at backend init.  On
     CPU, cross-process collectives go through gloo; each process
     contributes ``local_devices`` emulated host devices, so the global
-    device count is ``num_processes * local_devices``."""
+    device count is ``num_processes * local_devices``.
+
+    Robustness (ISSUE 10): the barrier-at-init is where a dead or
+    never-started peer used to hang a launch forever.  The init now runs
+    under a hard timeout (``REPRO_DIST_TIMEOUT_S``, default 60s) with
+    bounded retries + backoff (``REPRO_DIST_INIT_ATTEMPTS``, default 3),
+    and the terminal error names this rank and the coordinator."""
+    from repro.launch.multihost import retry_with_backoff
     flags = os.environ.get("XLA_FLAGS", "")
     if "--xla_force_host_platform_device_count" not in flags:
         os.environ["XLA_FLAGS"] = (
             f"{flags} --xla_force_host_platform_device_count="
             f"{local_devices}".strip())
     jax.config.update("jax_cpu_collectives_implementation", "gloo")
-    jax.distributed.initialize(coordinator_address=coordinator,
-                               num_processes=num_processes,
-                               process_id=process_id)
+    timeout_s = int(float(os.environ.get("REPRO_DIST_TIMEOUT_S", "60")))
+    attempts = int(os.environ.get("REPRO_DIST_INIT_ATTEMPTS", "3"))
+
+    def _init():
+        try:
+            jax.distributed.initialize(
+                coordinator_address=coordinator,
+                num_processes=num_processes, process_id=process_id,
+                initialization_timeout=timeout_s)
+        except TypeError:
+            # older jax without the kwarg: fall back to its default
+            jax.distributed.initialize(
+                coordinator_address=coordinator,
+                num_processes=num_processes, process_id=process_id)
+
+    retry_with_backoff(
+        _init, attempts=attempts,
+        desc=(f"jax.distributed init (rank {process_id}/{num_processes} "
+              f"via {coordinator})"))
 
 
 def make_multihost_clients_mesh(n_shards: int) -> Mesh:
@@ -128,6 +151,10 @@ def client_mesh_context(spec: Optional[str],
             raise ValueError(
                 f"--mesh clients={k} must divide evenly over "
                 f"--multihost {procs} processes")
+        # chaos hook: kill one rank before it joins the barrier, so the
+        # parent's peer-death reaping (spawn_multihost) is exercised
+        from repro.launch import faults
+        faults.fire("mh-child-start", rank=pid)
         init_distributed(coord, procs, pid, local_devices=k // procs)
         mesh = make_multihost_clients_mesh(k)
         from repro.sharding.api import DEFAULT_RULES, logical_sharding

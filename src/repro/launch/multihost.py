@@ -20,7 +20,33 @@ from __future__ import annotations
 import socket
 import subprocess
 import sys
-from typing import List, Optional, Sequence, Tuple
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+
+def retry_with_backoff(fn: Callable, *, attempts: int = 3,
+                       base_delay_s: float = 1.0,
+                       desc: str = "operation"):
+    """Call ``fn()`` with bounded retries and exponential backoff
+    (1x, 2x, 4x ... ``base_delay_s``).  The final failure re-raises the
+    last error wrapped with ``desc`` and the attempt count, so a
+    flaky-but-fatal init (a peer that never comes up) reports what was
+    being retried instead of a bare timeout."""
+    last: Optional[BaseException] = None
+    for attempt in range(attempts):
+        try:
+            return fn()
+        except Exception as e:          # noqa: BLE001 — re-raised below
+            last = e
+            if attempt + 1 < attempts:
+                delay = base_delay_s * (2 ** attempt)
+                print(f"[multihost] {desc} failed "
+                      f"(attempt {attempt + 1}/{attempts}): {e}; "
+                      f"retrying in {delay:.0f}s", file=sys.stderr,
+                      flush=True)
+                time.sleep(delay)
+    raise RuntimeError(
+        f"{desc} failed after {attempts} attempts: {last}") from last
 
 
 def add_multihost_arguments(ap) -> None:
@@ -64,12 +90,35 @@ def free_port() -> int:
         return s.getsockname()[1]
 
 
+def _reap(procs: Sequence[subprocess.Popen],
+          grace_s: float = 5.0) -> None:
+    """Terminate (then kill) every still-running child."""
+    for p in procs:
+        if p.poll() is None:
+            p.terminate()
+    deadline = time.monotonic() + grace_s
+    for p in procs:
+        if p.poll() is None:
+            try:
+                p.wait(timeout=max(0.0, deadline - time.monotonic()))
+            except subprocess.TimeoutExpired:
+                p.kill()
+
+
 def spawn_multihost(module: str, argv: Sequence[str], nprocs: int,
-                    *, timeout: Optional[float] = None) -> int:
+                    *, timeout: Optional[float] = None,
+                    poll_s: float = 0.2) -> int:
     """Re-launch ``python -m module argv`` as ``nprocs`` coordinated
     child processes and wait.  Child 0 streams to the parent's
     stdout/stderr (it owns all output writes); the others keep stderr
-    for crash visibility but drop stdout.  Returns the max exit code."""
+    for crash visibility but drop stdout.  Returns the max exit code.
+
+    Failure containment (ISSUE 10): the parent *polls* the whole fleet
+    instead of joining rank by rank — when any peer dies with a nonzero
+    status the survivors are reaped immediately (a dead rank would
+    otherwise leave the rest blocked in a collective forever) and the
+    error names the dead rank.  ``timeout`` bounds the whole launch the
+    same way (exit code 124, like timeout(1))."""
     coord = f"127.0.0.1:{free_port()}"
     procs: List[subprocess.Popen] = []
     for pid in range(nprocs):
@@ -78,12 +127,38 @@ def spawn_multihost(module: str, argv: Sequence[str], nprocs: int,
                "--_mh-proc-id", str(pid)]
         procs.append(subprocess.Popen(
             cmd, stdout=None if pid == 0 else subprocess.DEVNULL))
-    codes = []
+    deadline = (time.monotonic() + timeout) if timeout else None
+
+    def norm(c: int) -> int:
+        # shell convention: death by signal S reports 128 + S, so a
+        # SIGKILLed rank can never masquerade as success through max()
+        return c if c >= 0 else 128 - c
+
     try:
-        for p in procs:
-            codes.append(p.wait(timeout=timeout))
+        while True:
+            codes = [p.poll() for p in procs]
+            if all(c is not None for c in codes):
+                return max(norm(c) for c in codes)
+            dead = [(rank, c) for rank, c in enumerate(codes)
+                    if c is not None and c != 0]
+            if dead:
+                rank, code = dead[0]
+                what = (f"signal {-code}" if code < 0
+                        else f"exit code {code}")
+                print(f"[multihost] rank {rank}/{nprocs} died with "
+                      f"{what}; reaping the surviving processes",
+                      file=sys.stderr, flush=True)
+                _reap(procs)
+                # report the rank(s) that died on their own — the
+                # survivors we just SIGTERMed would otherwise mask the
+                # root cause with their 143s
+                return max(norm(c) for _, c in dead)
+            if deadline is not None and time.monotonic() > deadline:
+                print(f"[multihost] launch exceeded {timeout:.0f}s; "
+                      f"reaping all {nprocs} processes",
+                      file=sys.stderr, flush=True)
+                _reap(procs)
+                return 124
+            time.sleep(poll_s)
     finally:
-        for p in procs:
-            if p.poll() is None:
-                p.kill()
-    return max(codes) if codes else 0
+        _reap(procs)

@@ -77,6 +77,8 @@ from repro.fl.mobility import MobilityConfig
 from repro.fl.partition import PartitionConfig
 from repro.fl.rounds import FLSimConfig, FLSimulation
 from repro.fl.runconfig import RunConfig, add_run_arguments
+from repro.ioutil import write_atomic
+from repro.launch import faults
 from repro.sharding.api import sweep_devices
 
 SCHEMES = ("dcs", "ccs-fuzzy", "random")
@@ -148,7 +150,10 @@ def run_seed_group(scheme: str, classes_per_client: int, distribution: str,
                    cfg_fn: ConfigFn = fast_cell_config,
                    vmap_prefix: bool = True,
                    overlap: Optional[bool] = None,
-                   run: Optional[RunConfig] = None) -> List[Dict]:
+                   run: Optional[RunConfig] = None,
+                   checkpoint_dir: Optional[str] = None,
+                   checkpoint_every: int = 1,
+                   resume: bool = False) -> List[Dict]:
     """Run every seed of one cell group for ``rounds`` rounds.
 
     ``run`` is the shared execution profile (``RunConfig``): the sync
@@ -171,7 +176,14 @@ def run_seed_group(scheme: str, classes_per_client: int, distribution: str,
     before round r's accuracy metrics are read.  The vmapped dispatch
     then runs with ``donate_argnums`` on the seed-stacked params (a
     fresh (S, ...) stack every round).  Rows are bit-identical to the
-    serial schedule — same ops, same order, earlier enqueue."""
+    serial schedule — same ops, same order, earlier enqueue.
+
+    Preemption safety (ISSUE 10): with ``checkpoint_dir`` the whole seed
+    group snapshots atomically every ``checkpoint_every`` rounds (every
+    seed's driver state in one ``RoundCheckpointer`` entry, plus the
+    rows emitted so far); ``resume=True`` restores the latest good
+    snapshot so a killed group replays only its unfinished rounds —
+    bit-identically."""
     run = (run if run is not None else RunConfig()).resolved()
     if overlap is None:
         overlap = run.overlap_rounds
@@ -219,9 +231,23 @@ def run_seed_group(scheme: str, classes_per_client: int, distribution: str,
                                   else 0.0),
                 **row}
 
+    ckpt = None
+    if checkpoint_dir:
+        from repro.train.checkpoint import RoundCheckpointer
+        ckpt = RoundCheckpointer(checkpoint_dir, every=checkpoint_every)
     rows: List[Dict] = []
+    start = 0
+    if resume and ckpt is not None:
+        got = ckpt.latest_good()
+        if got is not None:
+            rnd, state, extra = got
+            for drv, st in zip(drivers, state["seeds"]):
+                drv.restore_state(st, extra)
+            rows = [dict(row) for row in extra.get("rows", [])]
+            start = rnd + 1
+    lead = jax.process_index() == 0
     states = None
-    for r in range(rounds):
+    for r in range(start, rounds):
         if states is None:
             states = dispatch(r)
         nxt = None
@@ -246,6 +272,12 @@ def run_seed_group(scheme: str, classes_per_client: int, distribution: str,
             for seed, drv, state in zip(seeds, drivers, states):
                 rows.append(meta(seed, drv.finish_round(r, state)))
         states = nxt
+        if ckpt is not None and lead and ckpt.due(r):
+            ckpt.save_round(
+                r, {"seeds": [drv.capture_state() for drv in drivers]},
+                extra={"rows": rows, "next_round": r + 1})
+            faults.fire("checkpoint-saved", round=r)
+        faults.fire("round-done", round=r)
     return rows
 
 
@@ -292,13 +324,120 @@ def rows_to_csv(rows: List[Dict]) -> str:
     return buf.getvalue()
 
 
+# typed CSV parse: the resume path reads the sweep's own output back
+_INT_COLS = {"round", "seed", "classes_per_client", "n_selected",
+             "n_aggregated", "n_straggler", "n_active"}
+_STR_COLS = {"scheme", "distribution", "rounds_behind_hist"}
+
+
+def parse_csv_rows(text: str) -> Optional[List[Dict]]:
+    """Parse a ``rows_to_csv`` artifact back into typed rows.
+
+    Returns ``None`` when the header is not this sweep's schema (a
+    foreign or incompatible file — the caller warns and starts fresh).
+    Rows that fail to parse (a torn tail from a non-atomic writer, short
+    or malformed lines) are dropped with a warning: their group simply
+    reruns.  Because every float column re-formats idempotently under
+    ``_FMT`` (parse(format(x)) == parse-stable), rows that survive a
+    parse round-trip re-emit byte-identically."""
+    import warnings
+    lines = text.splitlines()
+    if not lines or lines[0] != ",".join(CSV_COLUMNS):
+        return None
+    rows: List[Dict] = []
+    dropped = 0
+    for ln in lines[1:]:
+        if not ln:
+            continue
+        cells = ln.split(",")
+        if len(cells) != len(CSV_COLUMNS):
+            dropped += 1
+            continue
+        try:
+            row: Dict = {}
+            for col, cell in zip(CSV_COLUMNS, cells):
+                if col in _STR_COLS:
+                    row[col] = cell
+                elif col in _INT_COLS:
+                    row[col] = int(cell)
+                else:
+                    row[col] = float(cell)
+        except ValueError:
+            dropped += 1
+            continue
+        rows.append(row)
+    if dropped:
+        warnings.warn(f"dropped {dropped} unparsable row(s) from the "
+                      f"partial sweep CSV (torn tail); their groups "
+                      f"will rerun", RuntimeWarning)
+    return rows
+
+
+def _scenario_key(run: RunConfig) -> Tuple[str, str, str]:
+    """The async scenario coordinates as their *formatted* CSV strings —
+    comparing formatted values makes job-vs-CSV matching immune to float
+    parse/format wobble."""
+    return (_FMT["churn_rate"].format(run.churn_rate),
+            _FMT["staleness_lambda"].format(run.staleness_lambda),
+            _FMT["agg_cadence_s"].format(run.agg_cadence_s
+                                         if run.agg_cadence_s is not None
+                                         else 0.0))
+
+
+def _job_key(scheme: str, classes: int, dist: str,
+             run: RunConfig) -> Tuple:
+    return (scheme, int(classes), dist) + _scenario_key(run)
+
+
+def _row_job_key(row: Dict) -> Tuple:
+    return (row["scheme"], int(row["classes_per_client"]),
+            row["distribution"],
+            _FMT["churn_rate"].format(row["churn_rate"]),
+            _FMT["staleness_lambda"].format(row["staleness_lambda"]),
+            _FMT["agg_cadence_s"].format(row["agg_cadence_s"]))
+
+
+def _group_ckpt_dir(checkpoint_dir: str, scheme: str, classes: int,
+                    dist: str, run: RunConfig) -> str:
+    """A deterministic per-(cell, scenario) checkpoint subdirectory —
+    stable across the killed run and its resume."""
+    import os
+    slug = "_".join(str(p) for p in
+                    _job_key(scheme, classes, dist, run)).replace(".", "p")
+    return os.path.join(checkpoint_dir, slug)
+
+
+def completed_job_rows(parsed: Optional[List[Dict]],
+                       jobs: Sequence[Tuple[Group, RunConfig]],
+                       seeds: Sequence[int],
+                       rounds: int) -> Dict[Tuple, List[Dict]]:
+    """Map each fully completed job (every (seed, round) row present in
+    the partial CSV) to its parsed rows — those groups are skipped on
+    resume and their rows pass through to the final CSV verbatim."""
+    if not parsed:
+        return {}
+    by_job: Dict[Tuple, List[Dict]] = {}
+    for row in parsed:
+        by_job.setdefault(_row_job_key(row), []).append(row)
+    want = {(int(s), r) for s in seeds for r in range(rounds)}
+    out: Dict[Tuple, List[Dict]] = {}
+    for (group, run) in jobs:
+        key = _job_key(*group, run)
+        got = [row for row in by_job.get(key, [])
+               if (row["seed"], row["round"]) in want]
+        if {(row["seed"], row["round"]) for row in got} >= want:
+            out[key] = got
+    return out
+
+
 def _run_group_worker(args: Tuple) -> List[Dict]:
     """Top-level (picklable) worker: one cell group, serial in-process.
     ``mesh_spec`` (a ``--mesh`` string; Mesh objects don't pickle)
     rebuilds the client mesh inside the worker's own jax runtime; the
     frozen ``RunConfig`` pickles by value."""
     scheme, classes, dist, seeds, rounds, cfg_fn, vmap_prefix, \
-        mesh_spec, overlap, run, cache_dir = args
+        mesh_spec, overlap, run, cache_dir, ckpt_dir, ckpt_every, \
+        resume = args
     from repro.launch.cache import enable_jit_cache
     from repro.launch.mesh import client_mesh_context
     with client_mesh_context(mesh_spec):
@@ -307,7 +446,9 @@ def _run_group_worker(args: Tuple) -> List[Dict]:
         enable_jit_cache(cache_dir)
         return run_seed_group(scheme, classes, dist, seeds, rounds,
                               cfg_fn=cfg_fn, vmap_prefix=vmap_prefix,
-                              overlap=overlap, run=run)
+                              overlap=overlap, run=run,
+                              checkpoint_dir=ckpt_dir,
+                              checkpoint_every=ckpt_every, resume=resume)
 
 
 def sweep(schemes: Sequence[str], classes_list: Sequence[int],
@@ -317,7 +458,11 @@ def sweep(schemes: Sequence[str], classes_list: Sequence[int],
           overlap: Optional[bool] = None,
           runs: Optional[Sequence[RunConfig]] = None,
           cache_dir: Optional[str] = None,
-          log: Optional[Callable[[str], None]] = None) -> List[Dict]:
+          log: Optional[Callable[[str], None]] = None,
+          out_path: Optional[str] = None,
+          checkpoint_dir: Optional[str] = None,
+          checkpoint_every: int = 1,
+          resume: bool = False) -> List[Dict]:
     """Run the full grid — every cell under every async scenario — and
     return aggregated tidy rows.
 
@@ -333,46 +478,116 @@ def sweep(schemes: Sequence[str], classes_list: Sequence[int],
     submission, never silently switching profiles).  ``mesh_spec``
     crosses as the ``--mesh`` string and is activated inside each worker
     (the parent's forced-device env is inherited by the spawned
-    children)."""
+    children).
+
+    Preemption safety (ISSUE 10): with ``checkpoint_dir`` each group
+    snapshots per round under its own subdirectory and — when
+    ``out_path`` is set — the partial grid CSV is atomically rewritten
+    after every finished group.  ``resume=True`` reads ``out_path``
+    back: fully completed (cell, scenario) groups are recognized from
+    their rows and skipped (their rows pass through verbatim; the
+    ``_FMT`` formats are parse/format idempotent, so they re-emit
+    byte-identically), in-flight groups restart from their round
+    checkpoints, and the final CSV is byte-identical to an
+    uninterrupted run's."""
     log = log or (lambda s: None)
     runs = tuple(runs) if runs else (RunConfig().resolved(),)
     jobs: List[Tuple[Group, RunConfig]] = [
         ((s, c, d), run) for run in runs for s in schemes
         for c in classes_list for d in distributions]
+
+    done: Dict[Tuple, List[Dict]] = {}
+    if resume and out_path:
+        import os
+        if os.path.exists(out_path):
+            parsed = parse_csv_rows(open(out_path).read())
+            if parsed is None:
+                import warnings
+                warnings.warn(
+                    f"{out_path} is not a sweep CSV of this schema — "
+                    f"ignoring it and rerunning the full grid",
+                    RuntimeWarning)
+            else:
+                done = completed_job_rows(parsed, jobs, seeds, rounds)
+    done_rows = [row for got in done.values() for row in got]
+    lead = jax.process_index() == 0
+
+    def group_dir(scheme, classes, dist, run):
+        if not checkpoint_dir:
+            return None
+        return _group_ckpt_dir(checkpoint_dir, scheme, classes, dist, run)
+
+    def clear_group_ckpt(scheme, classes, dist, run):
+        d = group_dir(scheme, classes, dist, run)
+        if d is not None and lead:
+            from repro.train.checkpoint import RoundCheckpointer
+            RoundCheckpointer(d).clear()
+
+    def finish_group(index, group, run, fresh_rows):
+        """After each completed group: atomically rewrite the partial
+        grid CSV (the group's rows become durable), drop its
+        now-redundant round checkpoints, then announce the chaos hook.
+        A kill anywhere in this sequence resumes cleanly — worst case
+        (before the CSV lands) the group reruns from its checkpoints."""
+        if out_path and lead:
+            write_atomic(out_path,
+                         rows_to_csv(aggregate_rows(fresh_rows)
+                                     + done_rows))
+        clear_group_ckpt(*group, run)
+        faults.fire("group-done", index=index)
+
+    todo = [(i, group, run) for i, (group, run) in enumerate(jobs)
+            if _job_key(*group, run) not in done]
+    for key in done:
+        log(f"[sweep] resume: skipping completed group "
+            f"{'/'.join(str(p) for p in key)}")
+    # a completed group's checkpoints are stale — drop them so a later
+    # corruption there can never shadow the CSV's finished rows
+    for i, (group, run) in enumerate(jobs):
+        if _job_key(*group, run) in done:
+            clear_group_ckpt(*group, run)
+
     rows: List[Dict] = []
     if workers > 1:
         import multiprocessing as mp
         from concurrent.futures import ProcessPoolExecutor
         work = [(s, c, d, tuple(seeds), rounds, cfg_fn, vmap_prefix,
-                 mesh_spec, overlap, run, cache_dir)
-                for (s, c, d), run in jobs]
+                 mesh_spec, overlap, run, cache_dir,
+                 group_dir(s, c, d, run), checkpoint_every, resume)
+                for _, (s, c, d), run in todo]
         with ProcessPoolExecutor(
                 max_workers=workers,
                 mp_context=mp.get_context("spawn")) as pool:
-            for ((s, c, d), run), got in zip(
-                    jobs, pool.map(_run_group_worker, work)):
+            for (i, (s, c, d), run), got in zip(
+                    todo, pool.map(_run_group_worker, work)):
                 log(f"[sweep] {s} classes={c} {d} "
                     f"churn={run.churn_rate} lam={run.staleness_lambda}: "
                     f"{len(got)} rows")
                 rows.extend(got)
-        return aggregate_rows(rows)
+                finish_group(i, (s, c, d), run, rows)
+        return aggregate_rows(rows) + done_rows
 
     devices = sweep_devices()
-    for i, ((scheme, classes, dist), run) in enumerate(jobs):
+    for i, (scheme, classes, dist), run in todo:
         dev = devices[i % len(devices)]
         t0 = time.time()
         with jax.default_device(dev):
             got = run_seed_group(scheme, classes, dist, seeds, rounds,
                                  cfg_fn=cfg_fn, vmap_prefix=vmap_prefix,
-                                 overlap=overlap, run=run)
+                                 overlap=overlap, run=run,
+                                 checkpoint_dir=group_dir(scheme, classes,
+                                                          dist, run),
+                                 checkpoint_every=checkpoint_every,
+                                 resume=resume)
         rows.extend(got)
+        finish_group(i, (scheme, classes, dist), run, rows)
         accs = [r["accuracy"] for r in got if r["round"] == rounds - 1]
         log(f"[sweep] {scheme} classes={classes} {dist} "
             f"churn={run.churn_rate} lam={run.staleness_lambda} "
             f"cadence={run.agg_cadence_s or 0} on {dev}: "
             f"final acc {np.mean(accs):.3f} +/- {np.std(accs):.3f} "
             f"({len(seeds)} seeds, {time.time() - t0:.0f}s)")
-    return aggregate_rows(rows)
+    return aggregate_rows(rows) + done_rows
 
 
 def scenario_runs(base: RunConfig, churn_rates: Sequence[float],
@@ -440,6 +655,11 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default="sweep.csv")
     args = ap.parse_args(argv)
 
+    # checkpoints default to a dotdir beside the output (mirrors the jit
+    # cache); set BEFORE RunConfig.from_args so --resume validates
+    if args.checkpoint_dir is None:
+        args.checkpoint_dir = args.out + ".ckpt"
+
     if args.fast and args.paper_profile:
         ap.error("--fast and --paper-profile are mutually exclusive")
     if args.multihost > 1 and args.workers > 1:
@@ -463,7 +683,11 @@ def main(argv=None) -> int:
     distributions = tuple(args.distributions.split(","))
     cfg_fn = paper_cell_config if args.paper_profile else fast_cell_config
 
-    base_run = RunConfig.from_args(args)
+    full_run = RunConfig.from_args(args)
+    # the grid drives rounds itself — per-group checkpointing is the
+    # sweep's own (run_seed_group), not the per-sim RunConfig contract
+    base_run = dataclasses.replace(full_run, checkpoint_dir=None,
+                                   checkpoint_every=1, resume=False)
     if (args.churn_rates is None and args.staleness_lambdas is None
             and args.agg_cadences is None):
         runs = [base_run]
@@ -495,11 +719,14 @@ def main(argv=None) -> int:
                      workers=args.workers, mesh_spec=args.mesh,
                      runs=runs, cache_dir=cache_dir,
                      log=(lambda s: print(s, flush=True)) if is_lead
-                     else (lambda s: None))
+                     else (lambda s: None),
+                     out_path=args.out,
+                     checkpoint_dir=full_run.checkpoint_dir,
+                     checkpoint_every=full_run.checkpoint_every,
+                     resume=full_run.resume)
     csv_text = rows_to_csv(rows)
     if is_lead:                  # one writer in a multi-process launch
-        with open(args.out, "w") as f:
-            f.write(csv_text)
+        write_atomic(args.out, csv_text)
         print(f"[sweep] wrote {len(rows)} rows "
               f"({len(schemes)}x{len(classes_list)}x{len(distributions)} "
               f"cells x {len(runs)} scenarios x {args.seeds} seeds x "

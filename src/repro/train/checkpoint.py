@@ -1,67 +1,381 @@
-"""Checkpointing: flat-key npz snapshots of arbitrary param pytrees.
+"""Checkpointing (ISSUE 10): self-describing, checksummed, atomic round
+snapshots plus the legacy params/opt-state API.
 
-Host-local (single-process) persistence.  On a real multi-host pod this
-would be an Orbax/ocdbt store; the on-disk format here is deliberately
-simple: each leaf saved under its '/'-joined key path, plus a JSON
-manifest carrying pytree structure and step metadata.
+Two layers:
+
+- ``save_state`` / ``load_state`` — the **v2 state format**.  An
+  arbitrary pytree of dicts / lists / tuples / ``None`` / array leaves /
+  Python scalars is flattened to raw little-endian byte buffers inside
+  one ``arrays.npz`` (every entry stored as ``uint8`` bytes, so exotic
+  dtypes like ``bfloat16`` round-trip **bit-identically** — npz's native
+  dtype descriptors cannot represent them) and a JSON ``manifest.json``
+  carrying the structure skeleton (container kinds, dtypes, shapes,
+  Python-scalar tags), a sha256 checksum of the array payload, and an
+  arbitrary JSON ``extra``.  ``load_state`` needs no template: the
+  skeleton rebuilds the exact structure, leaves bit-for-bit.
+
+  Write order is the durability contract: ``arrays.npz`` is written
+  atomically first (``repro.ioutil.write_atomic``), the manifest —
+  which carries the checksum — atomically last.  The manifest is the
+  commit point: a kill between the two leaves an array file without a
+  manifest, which readers treat as "no checkpoint here", and any
+  post-commit corruption of the array payload fails the checksum.  A
+  torn or truncated checkpoint is therefore **detected, never silently
+  loaded** (``CheckpointCorruptError``).
+
+- ``save_checkpoint`` / ``load_checkpoint`` — the legacy (params,
+  opt_state, step) API, now layered on the v2 format.  ``load_checkpoint``
+  restores into the caller's template and validates **everything** the
+  old format let slide: the stored params treedef must match the
+  template's, and every leaf's dtype and shape must match exactly — a
+  mismatch raises with the offending '/'-joined key path instead of
+  silently casting.
+
+``RoundCheckpointer`` manages a directory of per-round snapshots for
+the FL drivers (``fl/rounds.py`` / ``fl/async_server.py`` / the sweep's
+seed groups): ``save_round`` writes ``round_NNNNNN/``, prunes old
+rounds beyond ``keep``, and ``latest_good`` walks rounds newest-first,
+**skipping corrupt or half-written snapshots with a warning**
+(``CheckpointCorruptWarning``) until a verified one loads — the
+degrade-gracefully contract the fault-injection suite
+(tests/test_faults.py) pins.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Optional, Tuple
+import re
+import shutil
+import warnings
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ioutil import sha256_file, write_atomic, write_atomic_json
 
-def _flatten(tree: Any) -> Dict[str, np.ndarray]:
-    flat = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(
-            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
-            for p in path)
-        flat[key] = np.asarray(leaf)
-    return flat
+FORMAT_VERSION = 2
+
+_ARRAYS = "arrays.npz"
+_MANIFEST = "manifest.json"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint exists but fails validation (missing pieces, bad
+    checksum, undecodable skeleton) — refuse to load it."""
+
+
+class CheckpointCorruptWarning(RuntimeWarning):
+    """A corrupt snapshot was detected and skipped (``latest_good``)."""
+
+
+# -- v2 self-describing state format -----------------------------------
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a dtype by name, including the ml_dtypes extension types
+    jax registers (bfloat16 & friends)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _encode(node: Any, flat: Dict[str, np.ndarray],
+            counter: List[int]) -> Dict[str, Any]:
+    """Recursively encode a pytree node into a JSON skeleton, collecting
+    array payloads (as raw byte buffers) into ``flat``."""
+    if node is None:
+        return {"kind": "none"}
+    if isinstance(node, dict):
+        return {"kind": "dict",
+                "items": {str(k): _encode(v, flat, counter)
+                          for k, v in node.items()}}
+    if isinstance(node, tuple):
+        return {"kind": "tuple",
+                "items": [_encode(v, flat, counter) for v in node]}
+    if isinstance(node, list):
+        return {"kind": "list",
+                "items": [_encode(v, flat, counter) for v in node]}
+    # leaf: a jax/numpy array or a Python/numpy scalar.  Stored as raw
+    # bytes: npz then only ever carries uint8 buffers, so any dtype —
+    # including bfloat16 — survives bit-for-bit.
+    py = None
+    if isinstance(node, bool):
+        py = "bool"
+    elif isinstance(node, int):
+        py = "int"
+    elif isinstance(node, float):
+        py = "float"
+    arr = np.asarray(node)
+    if arr.dtype == object:
+        raise TypeError(f"cannot checkpoint object-dtype leaf: {node!r}")
+    key = f"a{counter[0]:06d}"
+    counter[0] += 1
+    flat[key] = np.frombuffer(
+        np.ascontiguousarray(arr).tobytes(), dtype=np.uint8)
+    return {"kind": "leaf", "key": key, "dtype": str(arr.dtype),
+            "shape": list(arr.shape), "py": py}
+
+
+def _decode(skel: Dict[str, Any], flat: Dict[str, np.ndarray]) -> Any:
+    kind = skel["kind"]
+    if kind == "none":
+        return None
+    if kind == "dict":
+        return {k: _decode(v, flat) for k, v in skel["items"].items()}
+    if kind == "tuple":
+        return tuple(_decode(v, flat) for v in skel["items"])
+    if kind == "list":
+        return [_decode(v, flat) for v in skel["items"]]
+    if kind != "leaf":
+        raise CheckpointCorruptError(f"unknown skeleton kind {kind!r}")
+    raw = flat[skel["key"]]
+    arr = np.frombuffer(raw.tobytes(), dtype=_np_dtype(skel["dtype"]))
+    arr = arr.reshape(skel["shape"])
+    py = skel.get("py")
+    if py == "bool":
+        return bool(arr.reshape(()))
+    if py == "int":
+        return int(arr.reshape(()))
+    if py == "float":
+        return float(arr.reshape(()))
+    return arr
+
+
+def save_state(path: str, state: Any,
+               extra: Optional[Dict[str, Any]] = None) -> None:
+    """Atomically snapshot ``state`` (an arbitrary pytree of containers,
+    arrays and Python scalars) under directory ``path``.
+
+    ``extra`` is an arbitrary JSON-serializable sidecar (round indices,
+    metric rows, config echoes) stored in the manifest and returned
+    verbatim by ``load_state``.  The manifest write is the commit
+    point — see the module docstring for the durability contract."""
+    os.makedirs(path, exist_ok=True)
+    flat: Dict[str, np.ndarray] = {}
+    skeleton = _encode(jax.device_get(state), flat, [0])
+    import io
+    buf = io.BytesIO()
+    np.savez(buf, **flat)
+    write_atomic(os.path.join(path, _ARRAYS), buf.getvalue())
+    manifest = {"format_version": FORMAT_VERSION,
+                "skeleton": skeleton,
+                "arrays_sha256": sha256_file(os.path.join(path, _ARRAYS)),
+                "extra": extra if extra is not None else {}}
+    write_atomic_json(os.path.join(path, _MANIFEST), manifest, indent=1)
+
+
+def load_state(path: str) -> Tuple[Any, Dict[str, Any]]:
+    """Load and verify a ``save_state`` snapshot -> ``(state, extra)``.
+
+    Raises ``CheckpointCorruptError`` on any integrity failure: missing
+    manifest or arrays, checksum mismatch (torn/corrupted payload), or
+    an undecodable skeleton."""
+    man_path = os.path.join(path, _MANIFEST)
+    arr_path = os.path.join(path, _ARRAYS)
+    if not os.path.exists(man_path):
+        raise CheckpointCorruptError(
+            f"{path}: no manifest (half-written or not a checkpoint)")
+    try:
+        with open(man_path) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        raise CheckpointCorruptError(f"{path}: unreadable manifest: {e}")
+    if manifest.get("format_version") != FORMAT_VERSION:
+        raise CheckpointCorruptError(
+            f"{path}: unsupported format_version "
+            f"{manifest.get('format_version')!r} (want {FORMAT_VERSION})")
+    if not os.path.exists(arr_path):
+        raise CheckpointCorruptError(f"{path}: missing {_ARRAYS}")
+    digest = sha256_file(arr_path)
+    if digest != manifest.get("arrays_sha256"):
+        raise CheckpointCorruptError(
+            f"{path}: checksum mismatch for {_ARRAYS} (stored "
+            f"{manifest.get('arrays_sha256')!r}, computed {digest!r}) — "
+            f"torn or corrupted checkpoint")
+    try:
+        with np.load(arr_path) as data:
+            flat = {k: data[k] for k in data.files}
+        state = _decode(manifest["skeleton"], flat)
+    except (KeyError, ValueError, OSError) as e:
+        raise CheckpointCorruptError(f"{path}: undecodable payload: {e}")
+    return state, manifest.get("extra", {})
+
+
+def is_valid_checkpoint(path: str) -> bool:
+    """Cheap full-integrity probe (manifest + checksum + decode)."""
+    try:
+        load_state(path)
+        return True
+    except CheckpointCorruptError:
+        return False
+
+
+# -- legacy (params, opt_state, step) API ------------------------------
+
+def _treedef_str(tree: Any) -> str:
+    return str(jax.tree_util.tree_structure(tree))
 
 
 def save_checkpoint(path: str, params: Any, opt_state: Optional[Any] = None,
                     step: int = 0, extra: Optional[Dict] = None) -> None:
-    os.makedirs(path, exist_ok=True)
-    flat = {f"params/{k}": v for k, v in _flatten(params).items()}
+    """Snapshot ``(params, opt_state, step)`` under directory ``path``
+    (atomic + checksummed; see module docstring)."""
+    state = {"params": params}
     if opt_state is not None:
-        flat.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
-    np.savez(os.path.join(path, "arrays.npz"), **flat)
-    treedef_p = jax.tree_util.tree_structure(params)
-    manifest = {"step": step, "extra": extra or {},
-                "params_treedef": str(treedef_p)}
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=2)
+        state["opt"] = opt_state
+    meta = {"step": int(step), "extra": extra or {},
+            "params_treedef": _treedef_str(params)}
+    if opt_state is not None:
+        meta["opt_treedef"] = _treedef_str(opt_state)
+    save_state(path, state, extra=meta)
+
+
+def _restore_like(like: Any, got: Any, path: str) -> Any:
+    """Rebuild ``got`` (a decoded v2 state) into the container types of
+    the template ``like`` (namedtuples, custom orders), validating
+    structure, shape and **dtype** at every leaf — a mismatch raises
+    with the offending '/'-joined key path."""
+    if like is None:
+        if got is not None:
+            raise ValueError(f"structure mismatch at {path or '<root>'}: "
+                             f"checkpoint has a value where the template "
+                             f"has None")
+        return None
+    if isinstance(like, dict):
+        if not isinstance(got, dict):
+            raise ValueError(f"structure mismatch at {path or '<root>'}: "
+                             f"template dict vs checkpoint "
+                             f"{type(got).__name__}")
+        if sorted(got) != sorted(str(k) for k in like):
+            raise ValueError(
+                f"structure mismatch at {path or '<root>'}: template keys "
+                f"{sorted(str(k) for k in like)} vs checkpoint keys "
+                f"{sorted(got)}")
+        return {k: _restore_like(v, got[str(k)], f"{path}/{k}")
+                for k, v in like.items()}
+    if isinstance(like, (tuple, list)):
+        if not isinstance(got, (tuple, list)) or len(got) != len(like):
+            raise ValueError(f"structure mismatch at {path or '<root>'}: "
+                             f"template {type(like).__name__} of "
+                             f"{len(like)} vs checkpoint "
+                             f"{type(got).__name__}")
+        items = [_restore_like(v, g, f"{path}/{i}")
+                 for i, (v, g) in enumerate(zip(like, got))]
+        if isinstance(like, tuple):
+            # preserve namedtuple classes from the template
+            return type(like)(*items) if hasattr(like, "_fields") \
+                else tuple(items)
+        return items
+    # leaf
+    like_arr = np.asarray(like)
+    got_arr = np.asarray(got)
+    if tuple(got_arr.shape) != tuple(like_arr.shape):
+        raise ValueError(f"shape mismatch for {path or '<root>'}: "
+                         f"checkpoint {tuple(got_arr.shape)} vs template "
+                         f"{tuple(like_arr.shape)}")
+    if got_arr.dtype != like_arr.dtype:
+        raise ValueError(f"dtype mismatch for {path or '<root>'}: "
+                         f"checkpoint {got_arr.dtype} vs template "
+                         f"{like_arr.dtype} (refusing to cast silently)")
+    return jnp.asarray(got_arr)
 
 
 def load_checkpoint(path: str, params_like: Any,
                     opt_like: Optional[Any] = None
                     ) -> Tuple[Any, Optional[Any], int]:
-    """Restore into the structure of ``params_like`` (shape/dtype checked)."""
-    data = np.load(os.path.join(path, "arrays.npz"))
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    """Restore into the structure of ``params_like``.
 
-    def restore(prefix: str, like: Any) -> Any:
-        flat_like = jax.tree_util.tree_flatten_with_path(like)
-        leaves = []
-        for path_, leaf in flat_like[0]:
-            key = prefix + "/".join(
-                str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
-                for p in path_)
-            arr = data[key]
-            if tuple(arr.shape) != tuple(leaf.shape):
-                raise ValueError(f"shape mismatch for {key}: "
-                                 f"{arr.shape} vs {leaf.shape}")
-            leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
-        return jax.tree_util.tree_unflatten(flat_like[1], leaves)
+    Validates the stored params treedef against the template's and every
+    leaf's shape AND dtype (raising with the offending key path) on top
+    of the v2 integrity checks (checksum, manifest)."""
+    state, meta = load_state(path)
+    want = _treedef_str(params_like)
+    stored = meta.get("params_treedef")
+    if stored is not None and stored != want:
+        raise ValueError(
+            f"params treedef mismatch: checkpoint stored {stored} but the "
+            f"restore template is {want}")
+    params = _restore_like(params_like, state["params"], "params")
+    opt_state = None
+    if opt_like is not None:
+        if "opt" not in state:
+            raise ValueError("checkpoint has no opt state but opt_like "
+                             "was provided")
+        opt_state = _restore_like(opt_like, state["opt"], "opt")
+    return params, opt_state, int(meta["step"])
 
-    params = restore("params/", params_like)
-    opt_state = restore("opt/", opt_like) if opt_like is not None else None
-    return params, opt_state, int(manifest["step"])
+
+# -- per-round checkpoint management -----------------------------------
+
+_ROUND_RE = re.compile(r"^round_(\d{6,})$")
+
+
+class RoundCheckpointer:
+    """A directory of per-round ``save_state`` snapshots with cadence,
+    retention and corrupt-skip recovery.
+
+    Layout: ``directory/round_NNNNNN/{arrays.npz,manifest.json}``.  Each
+    snapshot is internally atomic (see ``save_state``); ``latest_good``
+    walks rounds newest-first and skips anything that fails integrity
+    checks with a ``CheckpointCorruptWarning`` — a kill mid-save or a
+    corrupted payload costs at most the rounds since the previous good
+    snapshot, never a silent load of bad state."""
+
+    def __init__(self, directory: str, every: int = 1, keep: int = 3):
+        if every < 1:
+            raise ValueError(f"checkpoint every must be >= 1: {every}")
+        if keep < 1:
+            raise ValueError(f"checkpoint keep must be >= 1: {keep}")
+        self.directory = os.fspath(directory)
+        self.every = int(every)
+        self.keep = int(keep)
+
+    def due(self, rnd: int) -> bool:
+        """True when round ``rnd`` (0-based) ends a cadence window."""
+        return (rnd + 1) % self.every == 0
+
+    def path_for(self, rnd: int) -> str:
+        return os.path.join(self.directory, f"round_{rnd:06d}")
+
+    def rounds_on_disk(self) -> List[int]:
+        """Round indices with snapshot directories, ascending (no
+        integrity check)."""
+        if not os.path.isdir(self.directory):
+            return []
+        out = []
+        for name in os.listdir(self.directory):
+            m = _ROUND_RE.match(name)
+            if m and os.path.isdir(os.path.join(self.directory, name)):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def save_round(self, rnd: int, state: Any,
+                   extra: Optional[Dict[str, Any]] = None) -> str:
+        """Snapshot round ``rnd`` and prune snapshots beyond ``keep``."""
+        path = self.path_for(rnd)
+        save_state(path, state, extra=extra)
+        for old in self.rounds_on_disk()[:-self.keep]:
+            shutil.rmtree(self.path_for(old), ignore_errors=True)
+        return path
+
+    def latest_good(self) -> Optional[Tuple[int, Any, Dict[str, Any]]]:
+        """``(round, state, extra)`` of the newest snapshot that passes
+        integrity checks, skipping corrupt ones with a warning; ``None``
+        when no good snapshot exists."""
+        for rnd in reversed(self.rounds_on_disk()):
+            try:
+                state, extra = load_state(self.path_for(rnd))
+                return rnd, state, extra
+            except CheckpointCorruptError as e:
+                warnings.warn(
+                    f"skipping corrupt checkpoint {self.path_for(rnd)}: "
+                    f"{e}", CheckpointCorruptWarning, stacklevel=2)
+        return None
+
+    def clear(self) -> None:
+        """Remove every snapshot (a finished run owes the disk nothing)."""
+        if os.path.isdir(self.directory):
+            shutil.rmtree(self.directory, ignore_errors=True)

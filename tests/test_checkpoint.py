@@ -1,0 +1,309 @@
+"""Checkpoint format tests (ISSUE 10): the v2 self-describing state
+format's bit-identity contract (property-tested over nested pytrees,
+bfloat16 included), the legacy (params, opt_state, step) API's
+validation (treedef + shape + dtype, with the offending key path), the
+checksum/corruption detection, ``RoundCheckpointer`` cadence /
+retention / corrupt-skip recovery, and ``write_atomic``'s interrupted
+write guarantee."""
+import collections
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.ioutil import sha256_file, write_atomic, write_atomic_json
+from repro.launch.faults import flip_byte, truncate_file
+from repro.train.checkpoint import (CheckpointCorruptError,
+                                    CheckpointCorruptWarning,
+                                    RoundCheckpointer, is_valid_checkpoint,
+                                    load_checkpoint, load_state,
+                                    save_checkpoint, save_state)
+
+
+# --------------------------------------------------------------------------
+# v2 state format: property-tested bit-identity over nested pytrees
+# --------------------------------------------------------------------------
+
+_LEAF_DTYPES = (np.float32, np.int32, jnp.bfloat16)
+
+
+def _rand_tree(rng: np.random.Generator, depth: int = 0):
+    """A random pytree: dicts / lists / tuples / None / array leaves of
+    f32 / bf16 / int32 / Python scalars / empty subtrees."""
+    pick = int(rng.integers(0, 10 if depth < 3 else 6))
+    if pick == 0:
+        return None
+    if pick == 1:
+        return int(rng.integers(-10**9, 10**9))
+    if pick == 2:
+        return float(rng.standard_normal())
+    if pick == 3:
+        return bool(rng.integers(0, 2))
+    if pick <= 5:
+        shape = tuple(int(s) for s in
+                      rng.integers(0, 4, size=int(rng.integers(0, 3))))
+        dtype = _LEAF_DTYPES[int(rng.integers(0, len(_LEAF_DTYPES)))]
+        if dtype is np.int32:
+            return rng.integers(-2**31, 2**31 - 1,
+                                size=shape).astype(np.int32)
+        vals = rng.standard_normal(shape)
+        if dtype is jnp.bfloat16:
+            return np.asarray(jnp.asarray(vals, jnp.bfloat16))
+        return vals.astype(np.float32)
+    n = int(rng.integers(0, 4))          # containers, possibly empty
+    if pick <= 7:
+        return {f"k{i}": _rand_tree(rng, depth + 1) for i in range(n)}
+    if pick == 8:
+        return [_rand_tree(rng, depth + 1) for _ in range(n)]
+    return tuple(_rand_tree(rng, depth + 1) for _ in range(n))
+
+
+def _assert_same_tree(a, b, path=""):
+    """Exact structural + bitwise equality (dtype, shape, raw bytes)."""
+    where = path or "<root>"
+    if a is None:
+        assert b is None, where
+    elif isinstance(a, dict):
+        assert isinstance(b, dict) and sorted(b) == sorted(a), where
+        for k in a:
+            _assert_same_tree(a[k], b[k], f"{where}/{k}")
+    elif isinstance(a, (list, tuple)):
+        assert type(b) in (type(a), tuple if isinstance(a, tuple)
+                           else list), where
+        assert len(a) == len(b), where
+        for i, (x, y) in enumerate(zip(a, b)):
+            _assert_same_tree(x, y, f"{where}/{i}")
+    elif isinstance(a, (bool, int, float)):
+        assert type(a) is type(b) and a == b, where
+    else:
+        aa, bb = np.asarray(a), np.asarray(b)
+        assert aa.dtype == bb.dtype, f"{where}: {aa.dtype} vs {bb.dtype}"
+        assert aa.shape == bb.shape, f"{where}: {aa.shape} vs {bb.shape}"
+        assert aa.tobytes() == bb.tobytes(), f"{where}: payload differs"
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10**6))
+def test_state_roundtrip_bit_identical(seed):
+    """Property: save_state -> load_state is the identity, bit-for-bit,
+    for arbitrary nested containers, dtypes and Python scalars."""
+    import tempfile
+    rng = np.random.default_rng(seed)
+    tree = {"t": _rand_tree(rng), "u": _rand_tree(rng)}
+    with tempfile.TemporaryDirectory() as d:
+        save_state(d, tree, extra={"seed": seed})
+        got, extra = load_state(d)
+    _assert_same_tree(tree, got)
+    assert extra == {"seed": seed}
+
+
+def test_bf16_bit_identity(tmp_path):
+    """bfloat16 cannot ride npz's native dtype descriptors — the raw
+    byte-buffer encoding must carry it bit-exactly (NaNs included)."""
+    raw = np.arange(64, dtype=np.uint16)         # every pattern distinct
+    arr = raw.view(jnp.bfloat16)
+    save_state(str(tmp_path), {"w": arr})
+    got, _ = load_state(str(tmp_path))
+    assert np.asarray(got["w"]).dtype == jnp.bfloat16
+    assert np.asarray(got["w"]).tobytes() == arr.tobytes()
+
+
+def test_empty_and_scalar_leaves(tmp_path):
+    state = {"empty_dict": {}, "empty_list": [], "empty_tuple": (),
+             "none": None, "i": 7, "f": 0.1, "b": True,
+             "empty_arr": np.zeros((0, 3), np.float32)}
+    save_state(str(tmp_path), state)
+    got, _ = load_state(str(tmp_path))
+    _assert_same_tree(state, got)
+    assert type(got["i"]) is int and type(got["f"]) is float
+    assert type(got["b"]) is bool
+
+
+def test_object_dtype_rejected(tmp_path):
+    with pytest.raises(TypeError, match="object-dtype"):
+        save_state(str(tmp_path), {"bad": np.array(["a", None],
+                                                   dtype=object)})
+
+
+# --------------------------------------------------------------------------
+# legacy API: restore-into-template validation
+# --------------------------------------------------------------------------
+
+Opt = collections.namedtuple("Opt", ["mu", "count"])
+
+
+def _params():
+    return {"dense": {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+                      "b": np.zeros(3, np.float32)}}
+
+
+def test_legacy_roundtrip_namedtuple_opt(tmp_path):
+    opt = Opt(mu={"dense": {"w": np.ones((2, 3), np.float32),
+                            "b": np.ones(3, np.float32)}},
+              count=np.int32(4))
+    save_checkpoint(str(tmp_path), _params(), opt, step=11,
+                    extra={"tag": "x"})
+    params, opt2, step = load_checkpoint(str(tmp_path), _params(), opt)
+    assert step == 11
+    assert isinstance(opt2, Opt)         # namedtuple class preserved
+    _assert_same_tree(jax.device_get(_params()), jax.device_get(params))
+    np.testing.assert_array_equal(np.asarray(opt2.count), 4)
+
+
+def test_legacy_dtype_mismatch_names_path(tmp_path):
+    save_checkpoint(str(tmp_path), _params())
+    tmpl = _params()
+    tmpl["dense"]["w"] = tmpl["dense"]["w"].astype(np.float16)
+    with pytest.raises(ValueError, match=r"dtype mismatch for "
+                                         r"params/dense/w"):
+        load_checkpoint(str(tmp_path), tmpl)
+
+
+def test_legacy_shape_mismatch_names_path(tmp_path):
+    save_checkpoint(str(tmp_path), _params())
+    tmpl = _params()
+    tmpl["dense"]["b"] = np.zeros(4, np.float32)
+    with pytest.raises(ValueError, match=r"shape mismatch for "
+                                         r"params/dense/b"):
+        load_checkpoint(str(tmp_path), tmpl)
+
+
+def test_legacy_treedef_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), _params())
+    tmpl = _params()
+    tmpl["extra_layer"] = np.zeros(2, np.float32)
+    with pytest.raises(ValueError, match="treedef mismatch"):
+        load_checkpoint(str(tmp_path), tmpl)
+
+
+def test_legacy_missing_opt_raises(tmp_path):
+    save_checkpoint(str(tmp_path), _params())     # no opt stored
+    with pytest.raises(ValueError, match="no opt state"):
+        load_checkpoint(str(tmp_path), _params(),
+                        opt_like={"m": np.zeros(1, np.float32)})
+
+
+# --------------------------------------------------------------------------
+# corruption detection: the manifest is the commit point
+# --------------------------------------------------------------------------
+
+def test_checksum_detects_flipped_byte(tmp_path):
+    save_state(str(tmp_path), {"w": np.arange(32, dtype=np.float32)})
+    assert is_valid_checkpoint(str(tmp_path))
+    flip_byte(str(tmp_path / "arrays.npz"), 10)
+    assert not is_valid_checkpoint(str(tmp_path))
+    with pytest.raises(CheckpointCorruptError, match="checksum mismatch"):
+        load_state(str(tmp_path))
+
+
+def test_truncated_manifest_detected(tmp_path):
+    save_state(str(tmp_path), {"w": np.zeros(4, np.float32)})
+    truncate_file(str(tmp_path / "manifest.json"), 20)
+    with pytest.raises(CheckpointCorruptError, match="unreadable manifest"):
+        load_state(str(tmp_path))
+
+
+def test_missing_manifest_is_half_written(tmp_path):
+    """A kill between the arrays write and the manifest write leaves no
+    manifest — readers must treat that as 'no checkpoint here'."""
+    save_state(str(tmp_path), {"w": np.zeros(4, np.float32)})
+    os.unlink(tmp_path / "manifest.json")
+    with pytest.raises(CheckpointCorruptError, match="no manifest"):
+        load_state(str(tmp_path))
+
+
+def test_format_version_mismatch_detected(tmp_path):
+    save_state(str(tmp_path), {"w": np.zeros(4, np.float32)})
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    man["format_version"] = 1
+    (tmp_path / "manifest.json").write_text(json.dumps(man))
+    with pytest.raises(CheckpointCorruptError, match="format_version"):
+        load_state(str(tmp_path))
+
+
+# --------------------------------------------------------------------------
+# RoundCheckpointer: cadence, retention, corrupt-skip recovery
+# --------------------------------------------------------------------------
+
+def _state(rnd):
+    return {"r": np.full(3, rnd, np.int32)}
+
+
+def test_round_cadence_and_retention(tmp_path):
+    ck = RoundCheckpointer(str(tmp_path), every=3, keep=2)
+    assert [r for r in range(9) if ck.due(r)] == [2, 5, 8]
+    for r in range(5):
+        ck.save_round(r, _state(r), extra={"next_round": r + 1})
+    assert ck.rounds_on_disk() == [3, 4]          # pruned beyond keep
+    rnd, state, extra = ck.latest_good()
+    assert rnd == 4 and extra["next_round"] == 5
+    np.testing.assert_array_equal(state["r"], 4)
+    ck.clear()
+    assert ck.rounds_on_disk() == []
+
+
+def test_latest_good_skips_corrupt_with_warning(tmp_path):
+    ck = RoundCheckpointer(str(tmp_path), keep=5)
+    for r in range(3):
+        ck.save_round(r, _state(r))
+    flip_byte(os.path.join(ck.path_for(2), "arrays.npz"), 10)
+    os.unlink(os.path.join(ck.path_for(1), "manifest.json"))
+    with pytest.warns(CheckpointCorruptWarning):
+        rnd, state, _ = ck.latest_good()
+    assert rnd == 0                               # newest *good* snapshot
+    np.testing.assert_array_equal(state["r"], 0)
+
+
+def test_latest_good_none_when_all_corrupt(tmp_path):
+    ck = RoundCheckpointer(str(tmp_path), keep=5)
+    ck.save_round(0, _state(0))
+    flip_byte(os.path.join(ck.path_for(0), "arrays.npz"), 10)
+    with pytest.warns(CheckpointCorruptWarning):
+        assert ck.latest_good() is None
+    assert RoundCheckpointer(str(tmp_path / "nothing")).latest_good() \
+        is None
+
+
+def test_round_checkpointer_validates_args(tmp_path):
+    with pytest.raises(ValueError):
+        RoundCheckpointer(str(tmp_path), every=0)
+    with pytest.raises(ValueError):
+        RoundCheckpointer(str(tmp_path), keep=0)
+
+
+# --------------------------------------------------------------------------
+# write_atomic: a failed/interrupted write never tears the target
+# --------------------------------------------------------------------------
+
+def test_write_atomic_interrupted_leaves_target_intact(tmp_path,
+                                                       monkeypatch):
+    """Kill the write at the rename (the last possible moment): the
+    previous contents must survive untouched, and a retry lands the new
+    payload completely."""
+    target = tmp_path / "artifact.csv"
+    write_atomic(target, "old,complete,contents\n")
+    real_replace = os.replace
+
+    def dying_replace(src, dst):
+        raise OSError("simulated crash at commit")
+
+    monkeypatch.setattr(os, "replace", dying_replace)
+    with pytest.raises(OSError, match="simulated crash"):
+        write_atomic(target, "new,partial?\n")
+    assert target.read_text() == "old,complete,contents\n"
+    monkeypatch.setattr(os, "replace", real_replace)
+    write_atomic(target, "new,complete,contents\n")
+    assert target.read_text() == "new,complete,contents\n"
+
+
+def test_write_atomic_json_and_checksum(tmp_path):
+    p = tmp_path / "bench.json"
+    write_atomic_json(p, {"metric": 1.5, "n": [1, 2]}, indent=1)
+    assert json.loads(p.read_text()) == {"metric": 1.5, "n": [1, 2]}
+    digest = sha256_file(p)
+    assert digest == sha256_file(p) and len(digest) == 64

@@ -1,0 +1,360 @@
+"""Fault-injection harness (ISSUE 10): the ``REPRO_FAULTS`` plan
+grammar, terminal actions (SIGKILL / abrupt exit) in real subprocesses,
+a SIGKILL-at-checkpoint + resume end-to-end parity pin, torn-checkpoint
+fallback to the last good snapshot, the ``overflow@resume`` behaviour
+switch, and the multihost launcher's peer-death reaping / retry /
+timeout containment."""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.launch import faults
+from repro.launch.faults import (FaultDirective, flip_byte, parse_plan,
+                                 truncate_file)
+from repro.launch.multihost import retry_with_backoff, spawn_multihost
+
+REPO = Path(__file__).resolve().parent.parent
+
+# --------------------------------------------------------------------------
+# plan grammar
+# --------------------------------------------------------------------------
+
+
+def test_parse_plan_grammar():
+    plan = parse_plan("sigkill@checkpoint-saved:round=2;"
+                      "exit=7@mh-child-start:rank=1;"
+                      "overflow@resume")
+    assert plan[0] == FaultDirective("sigkill", "checkpoint-saved",
+                                     (("round", "2"),))
+    assert plan[1].action == "exit" and plan[1].code == 7
+    assert plan[1].params == (("rank", "1"),)
+    assert plan[2] == FaultDirective("overflow", "resume")
+    assert parse_plan("") == [] and parse_plan("  ;  ") == []
+
+
+def test_parse_plan_rejects_malformed():
+    with pytest.raises(ValueError, match="bad fault directive"):
+        parse_plan("sigkill-no-event")
+    with pytest.raises(ValueError, match="bad fault parameter"):
+        parse_plan("sigkill@round-done:novalue")
+
+
+def test_directive_matching():
+    d = FaultDirective("sigkill", "round-done", (("round", "2"),))
+    assert d.matches("round-done", {"round": 2})       # str-compared
+    assert not d.matches("round-done", {"round": 1})
+    assert not d.matches("checkpoint-saved", {"round": 2})
+    assert not d.matches("round-done", {})             # param missing
+
+
+def test_active_and_fire_noop(monkeypatch):
+    monkeypatch.delenv(faults.ENV_VAR, raising=False)
+    faults.fire("round-done", round=0)                 # no plan: no-op
+    assert not faults.active("overflow", "resume")
+    monkeypatch.setenv(faults.ENV_VAR, "overflow@resume")
+    assert faults.active("overflow", "resume")
+    assert not faults.active("overflow", "round-done")
+    faults.fire("round-done", round=0)     # non-terminal: still a no-op
+
+
+# --------------------------------------------------------------------------
+# terminal actions (subprocess: the test process must survive)
+# --------------------------------------------------------------------------
+
+_FIRE = ("from repro.launch.faults import fire\n"
+         "fire('round-done', round=2)\n"
+         "print('SURVIVED')\n")
+
+
+def _run_fire(plan):
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src"),
+           faults.ENV_VAR: plan}
+    return subprocess.run([sys.executable, "-c", _FIRE],
+                          capture_output=True, text=True, env=env,
+                          cwd=REPO, timeout=120)
+
+
+def test_fire_sigkill_matches_params():
+    proc = _run_fire("sigkill@round-done:round=2")
+    assert proc.returncode == -signal.SIGKILL
+    assert "SURVIVED" not in proc.stdout
+    assert "injecting sigkill at round-done" in proc.stderr
+
+
+def test_fire_exit_code():
+    proc = _run_fire("exit=7@round-done")
+    assert proc.returncode == 7 and "SURVIVED" not in proc.stdout
+
+
+def test_fire_param_mismatch_survives():
+    proc = _run_fire("sigkill@round-done:round=5")
+    assert proc.returncode == 0 and "SURVIVED" in proc.stdout
+
+
+# --------------------------------------------------------------------------
+# corruption helpers + CLI
+# --------------------------------------------------------------------------
+
+def test_truncate_and_flip(tmp_path):
+    p = tmp_path / "f.bin"
+    p.write_bytes(bytes(range(16)))
+    truncate_file(str(p), 4)
+    assert p.read_bytes() == bytes([0, 1, 2, 3])
+    flip_byte(str(p), 1)
+    assert p.read_bytes() == bytes([0, 0xFE, 2, 3])
+    flip_byte(str(p), 1)                               # involution
+    assert p.read_bytes() == bytes([0, 1, 2, 3])
+    with pytest.raises(ValueError, match="out of range"):
+        flip_byte(str(p), 99)
+
+
+def test_faults_cli(tmp_path):
+    p = tmp_path / "f.bin"
+    p.write_bytes(b"abcdef")
+    assert faults.main(["truncate", str(p), "3"]) == 0
+    assert p.read_bytes() == b"abc"
+    assert faults.main(["flipbyte", str(p), "0"]) == 0
+    assert p.read_bytes()[0] == ord("a") ^ 0xFF
+    assert faults.main(["check", "sigkill@round-done"]) == 0
+    assert faults.main(["bogus"]) == 2
+
+
+# --------------------------------------------------------------------------
+# FL integration: kill at a checkpoint, resume, fall back past torn
+# snapshots, and the overflow@resume behaviour switch
+# --------------------------------------------------------------------------
+
+
+def _cfg(seed=0):
+    from repro.fl.mobility import MobilityConfig
+    from repro.fl.partition import PartitionConfig
+    from repro.fl.rounds import FLSimConfig
+    return FLSimConfig(
+        scheme="ccs-fuzzy", n_rounds=3, local_epochs=1,
+        samples_per_class=260, probe_samples=64, seed=seed,
+        partition=PartitionConfig(n_clients=10, big_clients=3,
+                                  big_quantity=120, small_quantity=40,
+                                  classes_per_client=9, seed=seed),
+        mobility=MobilityConfig(n_vehicles=10, seed=seed))
+
+
+_SIM_CHILD = r"""
+import os
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import hashlib
+import json
+import sys
+import numpy as np
+import jax
+jax.config.update("jax_enable_x64", False)
+from repro.fl.mobility import MobilityConfig
+from repro.fl.partition import PartitionConfig
+from repro.fl.rounds import FLSimConfig, FLSimulation
+from repro.train.checkpoint import RoundCheckpointer
+
+ckdir, rounds, resume = sys.argv[1], int(sys.argv[2]), sys.argv[3] == "1"
+cfg = FLSimConfig(
+    scheme="ccs-fuzzy", n_rounds=rounds, local_epochs=1,
+    samples_per_class=260, probe_samples=64, seed=0,
+    partition=PartitionConfig(n_clients=10, big_clients=3,
+                              big_quantity=120, small_quantity=40,
+                              classes_per_client=9, seed=0),
+    mobility=MobilityConfig(n_vehicles=10, seed=0))
+sim = FLSimulation(cfg)
+rows = sim.run(rounds, checkpointer=RoundCheckpointer(ckdir),
+               resume=resume)
+h = hashlib.sha256()
+for leaf in jax.tree.leaves(sim.params):
+    h.update(np.asarray(leaf).tobytes())
+print(json.dumps({"rows": rows, "params_sha256": h.hexdigest()}))
+"""
+
+
+def _run_sim_child(ckdir, rounds, resume, plan=None):
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src")}
+    env.pop(faults.ENV_VAR, None)
+    if plan:
+        env[faults.ENV_VAR] = plan
+    return subprocess.run(
+        [sys.executable, "-c", _SIM_CHILD, str(ckdir), str(rounds),
+         "1" if resume else "0"],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=1500)
+
+
+@pytest.mark.slow
+def test_sigkill_at_checkpoint_then_resume_parity(tmp_path):
+    """The acceptance pin, end to end in real processes: SIGKILL the
+    worker the instant round 1's snapshot commits, resume in a fresh
+    process, and the surviving trajectory (rows + a params digest) is
+    identical to an uninterrupted run's."""
+    ref = _run_sim_child(tmp_path / "ref", 3, False)
+    assert ref.returncode == 0, ref.stderr[-4000:]
+    ref_out = json.loads(ref.stdout.strip().splitlines()[-1])
+
+    killed = _run_sim_child(tmp_path / "ck", 3, False,
+                            plan="sigkill@checkpoint-saved:round=1")
+    assert killed.returncode == -signal.SIGKILL
+    assert "injecting sigkill at checkpoint-saved" in killed.stderr
+
+    resumed = _run_sim_child(tmp_path / "ck", 3, True)
+    assert resumed.returncode == 0, resumed.stderr[-4000:]
+    res_out = json.loads(resumed.stdout.strip().splitlines()[-1])
+    assert res_out == ref_out
+
+
+def test_torn_checkpoint_falls_back_to_last_good(tmp_path):
+    """Corrupting the newest snapshot must cost only the rounds since
+    the previous good one — the corrupt snapshot is skipped with a
+    warning, never silently loaded, and parity still holds."""
+    from repro.fl.rounds import FLSimulation
+    from repro.train.checkpoint import (CheckpointCorruptWarning,
+                                        RoundCheckpointer)
+    rows_full = FLSimulation(_cfg()).run(2)
+
+    ck = RoundCheckpointer(str(tmp_path))
+    FLSimulation(_cfg()).run(2, checkpointer=ck)
+    flip_byte(os.path.join(ck.path_for(1), "arrays.npz"), 10)
+
+    res = FLSimulation(_cfg())
+    with pytest.warns(CheckpointCorruptWarning):
+        rows_res = res.run(2, checkpointer=ck, resume=True)
+    assert rows_res == rows_full           # round 1 replayed from round 0
+
+
+def test_overflow_switch_forces_dense_recovery(tmp_path, monkeypatch):
+    """``overflow@resume`` clamps the windowed election's bucket
+    capacity on restore, so every post-resume round exercises the
+    ``elect_overflow`` dense-recovery path — and the rows still match
+    the uninterrupted run's (overflow recovery is exact)."""
+    from repro.fl.rounds import FLSimulation
+    from repro.train.checkpoint import RoundCheckpointer
+    monkeypatch.delenv(faults.ENV_VAR, raising=False)
+    rows_full = FLSimulation(_cfg()).run(2)
+    ck = RoundCheckpointer(str(tmp_path))
+    FLSimulation(_cfg()).run(1, checkpointer=ck)
+
+    monkeypatch.setenv(faults.ENV_VAR, "overflow@resume")
+    res = FLSimulation(_cfg())
+    rows_res = res.run(2, checkpointer=ck, resume=True)
+    assert res.stage_cfg.elect_capacity == 1
+    assert rows_res == rows_full
+
+
+def test_restore_without_switch_keeps_capacity(tmp_path, monkeypatch):
+    from repro.fl.rounds import FLSimulation
+    from repro.train.checkpoint import RoundCheckpointer
+    monkeypatch.delenv(faults.ENV_VAR, raising=False)
+    ck = RoundCheckpointer(str(tmp_path))
+    sim = FLSimulation(_cfg())
+    cap = sim.stage_cfg.elect_capacity
+    sim.run(1, checkpointer=ck)
+    res = FLSimulation(_cfg())
+    res.run(2, checkpointer=ck, resume=True)
+    assert res.stage_cfg.elect_capacity == cap
+
+
+# --------------------------------------------------------------------------
+# multihost containment: peer death, reaping, retry, timeout
+# --------------------------------------------------------------------------
+
+_FAKE_MH = """\
+import os
+import signal
+import sys
+import time
+
+rank = int(sys.argv[sys.argv.index("--_mh-proc-id") + 1])
+mode = sys.argv[1]
+if mode == "faultfire":
+    # the same hook client_mesh_context fires before distributed init
+    from repro.launch.faults import fire
+    fire("mh-child-start", rank=rank)
+if mode == "exit3" and rank == 1:
+    sys.exit(3)
+if mode == "kill9" and rank == 1:
+    os.kill(os.getpid(), signal.SIGKILL)
+if mode == "clean":
+    sys.exit(0)
+time.sleep(120)       # survivors block "in a collective" until reaped
+"""
+
+
+@pytest.fixture()
+def fake_mh_module(tmp_path, monkeypatch):
+    (tmp_path / "chaos_fake_mh.py").write_text(_FAKE_MH)
+    monkeypatch.setenv(
+        "PYTHONPATH", os.pathsep.join([str(tmp_path), str(REPO / "src")]))
+    monkeypatch.delenv(faults.ENV_VAR, raising=False)
+    return "chaos_fake_mh"
+
+
+def test_spawn_reaps_survivors_when_peer_exits(fake_mh_module, capsys):
+    """Rank 1 dies with exit code 3 while its peers sleep: the parent
+    must name the dead rank, reap the sleepers immediately (not after
+    their 120s), and report the failure code."""
+    t0 = time.monotonic()
+    rc = spawn_multihost(fake_mh_module, ["exit3"], 3)
+    elapsed = time.monotonic() - t0
+    assert rc == 3
+    assert elapsed < 60, f"survivors not reaped promptly ({elapsed:.0f}s)"
+    err = capsys.readouterr().err
+    assert "rank 1/3 died with exit code 3" in err
+
+
+def test_spawn_normalizes_signal_death(fake_mh_module, capsys):
+    """A SIGKILLed rank reports 137 (128+9) — a negative waitpid code
+    must never let max() launder the failure into success."""
+    rc = spawn_multihost(fake_mh_module, ["kill9"], 2)
+    assert rc == 137
+    assert "died with signal 9" in capsys.readouterr().err
+
+
+def test_spawn_all_clean_is_success(fake_mh_module):
+    assert spawn_multihost(fake_mh_module, ["clean"], 2) == 0
+
+
+def test_spawn_timeout_reaps_everyone(fake_mh_module, capsys):
+    t0 = time.monotonic()
+    rc = spawn_multihost(fake_mh_module, ["hang"], 2, timeout=3)
+    elapsed = time.monotonic() - t0
+    assert rc == 124 and elapsed < 60
+    assert "exceeded" in capsys.readouterr().err
+
+
+def test_mh_child_start_fault_kills_one_rank(fake_mh_module, monkeypatch):
+    """Plan-driven peer death end to end: children inherit the
+    ``REPRO_FAULTS`` plan, rank 1 fires the ``mh-child-start`` hook (the
+    one the mesh context announces before distributed init) and dies;
+    the parent fails the launch fast instead of hanging the barrier."""
+    monkeypatch.setenv(faults.ENV_VAR, "exit=5@mh-child-start:rank=1")
+    rc = spawn_multihost(fake_mh_module, ["faultfire"], 2)
+    assert rc == 5
+
+
+def test_retry_with_backoff_recovers_and_reports():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("coordinator not up")
+        return "joined"
+
+    assert retry_with_backoff(flaky, attempts=4,
+                              base_delay_s=0.01) == "joined"
+    assert len(calls) == 3
+
+    def doomed():
+        raise OSError("nope")
+
+    with pytest.raises(RuntimeError,
+                       match=r"dist init failed after 2 attempts"):
+        retry_with_backoff(doomed, attempts=2, base_delay_s=0.01,
+                           desc="dist init")
